@@ -1,0 +1,46 @@
+"""Digital clustering core (paper section IV.B / Table text): k-means
+throughput and quality.  Paper: 1000 samples/epoch in 0.32 us on the
+hardware core; here we report the simulator's samples/s plus purity on the
+AE-reduced feature pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import row, time_call
+from repro.core import kmeans
+from repro.data import synthetic as syn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x, labels = syn.gaussian_mixture(key, 1000, dim=32, k=8, spread=2.0,
+                                     noise=0.2)
+    init = kmeans.init_plusplus(jax.random.PRNGKey(1), x, 8)
+
+    us = time_call(lambda: kmeans.kmeans_fit(x, init, epochs=1)[0])
+    row("cluster.epoch_us_1000samples", us,
+        f"paper_core=0.32us;sim_samples_per_s={1000 / (us * 1e-6):.0f}")
+
+    centers, assign, inertia = kmeans.kmeans_fit(x, init, epochs=15)
+    purity = 0.0
+    a = np.asarray(assign)
+    l = np.asarray(labels)
+    for c in range(8):
+        m = l[a == c]
+        if len(m):
+            purity += np.max(np.bincount(m, minlength=8))
+    row("cluster.purity", purity / len(l) * 100, "percent")
+    row("cluster.inertia_drop",
+        float(inertia[0] - inertia[-1]) / float(inertia[0]) * 100,
+        "percent decrease over 15 epochs")
+
+    # hardware-limit tile (32 clusters x 32 dims) via the Pallas kernel
+    from repro.kernels import ops
+    xk = x[:512]
+    ck = jax.random.normal(jax.random.PRNGKey(2), (32, 32))
+    us_k = time_call(lambda: ops.kmeans_assign(xk, ck))
+    row("cluster.kernel_assign_us", us_k, "pallas interpret, 512x32 vs 32 centers")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table II: memristor core timing/power per execution step.
+
+Emits the analytic hardware-model numbers (exact paper constants) next to
+the measured simulation cost of the corresponding JAX op on this host —
+the former is the reproduction target, the latter the simulator throughput.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.core import crossbar as xb, hw_model as hw
+from repro.core.crossbar import CrossbarSpec
+
+
+def main():
+    spec = CrossbarSpec()
+    key = jax.random.PRNGKey(0)
+    params = xb.init_conductances(key, 400, 100, spec)
+    x = jax.random.uniform(key, (1, 400), minval=-0.5, maxval=0.5)
+
+    fwd = jax.jit(lambda p, x: xb.crossbar_apply(p, x, spec))
+    row("table2.fwd.paper_us", hw.FWD_US,
+        f"power_mw={hw.FWD_MW};energy_j={hw.core_step_energy_j(hw.FWD_US, hw.FWD_MW, 1):.3e}")
+    row("table2.fwd.sim_us", time_call(fwd, params, x), "jax crossbar fwd 400x100")
+
+    bwd = jax.jit(lambda p, d: d @ (p["g_plus"] - p["g_minus"]).T)
+    d = jax.random.normal(key, (1, 100)) * 0.1
+    row("table2.bwd.paper_us", hw.BWD_US, f"power_mw={hw.BWD_MW}")
+    row("table2.bwd.sim_us", time_call(bwd, params, d), "jax error backprop")
+
+    def upd(p, x, d):
+        layers, _ = xb.paper_backprop_step([p], x, jnp.zeros((1, 100)), spec,
+                                           lr=0.01)
+        return layers[0]["g_plus"]
+    row("table2.update.paper_us", hw.UPD_US, f"power_mw={hw.UPD_MW}")
+    row("table2.update.sim_us", time_call(jax.jit(upd), params, x, d),
+        "jax pulse update (full step)")
+
+    row("table2.core_area_mm2", 0.0, f"paper={hw.CORE_AREA_MM2}")
+    row("table2.system_area_mm2", 0.0,
+        f"paper={hw.SYSTEM_AREA_MM2};cores={hw.SYSTEM_CORES};"
+        f"risc_mm2={hw.RISC_AREA_MM2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Roofline-table benchmark: renders the dry-run sweep cache as CSV rows
+(one per compiled cell) so the bench output carries the §Roofline numbers.
+Requires experiments/dryrun/*.json (produced by repro.launch.sweep)."""
+import glob
+import json
+import os
+
+from benchmarks.common import row
+
+OUT = "experiments/dryrun"
+
+
+def main():
+    files = sorted(glob.glob(os.path.join(OUT, "*.json")))
+    if not files:
+        row("dryrun.cells", 0, "run `python -m repro.launch.sweep` first")
+        return
+    n_ok = n_skip = n_fit = 0
+    for f in files:
+        r = json.load(open(f))
+        tag = f"{r['arch']}.{r['shape']}.{r['mesh']}"
+        if "skipped" in r:
+            n_skip += 1
+            continue
+        n_ok += 1
+        rf, m = r["roofline"], r["memory"]
+        n_fit += bool(m["fits"])
+        row(f"dryrun.{tag}.bound_ms", rf["t_bound"] * 1e3,
+            f"bottleneck={rf['bottleneck']};mfu_bound={rf['mfu_bound']:.4f};"
+            f"hbm_gib={m['per_device_bytes']/2**30:.2f};fits={m['fits']}")
+    row("dryrun.cells", n_ok, f"skips={n_skip};fit={n_fit}/{n_ok}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: interpret-mode correctness cost + analytic v5e
+roofline for each Pallas kernel's tile (the dry-run prices whole graphs;
+this prices the kernels standalone)."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.kernels import ops
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+def _roofline_us(flops, bytes_):
+    return max(flops / PEAK_FLOPS, bytes_ / HBM_BW) * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    cases = [("paper_tile", 128, 512, 128), ("wide", 256, 2048, 512)]
+    for name, M, K, N in cases:
+        k1, k2, k3 = jax.random.split(key, 3)
+        x = jax.random.normal(k1, (M, K), jnp.bfloat16) * 0.3
+        gp = jax.random.uniform(k2, (K, N)).astype(jnp.bfloat16)
+        gm = jax.random.uniform(k3, (K, N)).astype(jnp.bfloat16)
+        us = time_call(ops.crossbar_fwd, x, gp, gm, iters=3)
+        flops = 2 * M * K * N + M * K * N  # matmul + diff-pair subtract
+        bytes_ = 2 * (M * K + 2 * K * N + 2 * M * N)
+        row(f"kernel.crossbar_fwd.{name}.interp_us", us,
+            f"v5e_roofline_us={_roofline_us(flops, bytes_):.2f}")
+
+        dy = jax.random.normal(k1, (M, N), jnp.bfloat16) * 0.1
+        us = time_call(ops.crossbar_bwd, dy, gp, gm, iters=3)
+        row(f"kernel.crossbar_bwd.{name}.interp_us", us,
+            f"v5e_roofline_us={_roofline_us(flops, bytes_):.2f}")
+
+        d32 = dy.astype(jnp.float32)
+        us = time_call(lambda: ops.pulse_update(
+            gp.astype(jnp.float32), gm.astype(jnp.float32),
+            x.astype(jnp.float32), d32, lr=0.01), iters=3)
+        row(f"kernel.pulse_update.{name}.interp_us", us,
+            f"v5e_roofline_us={_roofline_us(flops, 4 * 4 * K * N):.2f}")
+
+    # fused flash attention (prefill hot-spot)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (2, 256, 4, 64), jnp.bfloat16)
+    kk_ = jax.random.normal(kk, (2, 256, 2, 64), jnp.bfloat16)
+    vv = jax.random.normal(kv, (2, 256, 2, 64), jnp.bfloat16)
+    us = time_call(ops.flash_attention, q, kk_, vv, iters=3)
+    fl = 4 * 2 * 256 * 256 * 4 * 64 * 0.5   # causal half
+    by = 2 * (2 * 256 * 4 * 64 * 2 + 2 * 2 * 256 * 2 * 64 * 2)
+    row("kernel.flash_attention.256tok.interp_us", us,
+        f"v5e_roofline_us={_roofline_us(fl, by):.2f}")
+
+    x = jax.random.normal(key, (2048, 32))
+    c = jax.random.normal(key, (32, 32))
+    us = time_call(ops.kmeans_assign, x, c, iters=3)
+    flops = 3 * 2048 * 32 * 32
+    bytes_ = 4 * (2048 * 32 + 32 * 32 + 2048)
+    row("kernel.kmeans_assign.interp_us", us,
+        f"v5e_roofline_us={_roofline_us(flops, bytes_):.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Framework-level step benchmarks on reduced LM configs (CPU): train-step
+and decode-step wall time for representative families, standard vs crossbar
+execution mode — quantifies the simulation-side cost of the paper's mode."""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, time_call
+from repro.configs import get_reduced_config
+from repro.data.pipeline import TokenStream
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+
+
+def main():
+    for arch in ("qwen2-0.5b", "mamba2-130m", "qwen3-moe-30b-a3b"):
+        for crossbar in (False, True):
+            cfg = get_reduced_config(arch, crossbar=crossbar)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            opt = adamw(1e-3)
+            opt_state = opt.init(params)
+            ts = TokenStream(cfg.vocab_size, 64, 4, seed=0)
+            batch = ts.batch_at(0)
+            step = jax.jit(make_train_step(model, opt))
+            us = time_call(step, params, opt_state, batch, jnp.int32(0),
+                           iters=3)
+            tokens = 64 * 4
+            mode = "crossbar" if crossbar else "standard"
+            row(f"lm.train_step.{arch}.{mode}_us", us,
+                f"tok_per_s={tokens / (us * 1e-6):.0f}")
+
+        cfg = get_reduced_config(arch)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        cache = model.init_cache(4, 64)
+        dec = jax.jit(model.decode_fn)
+        us = time_call(dec, params, cache,
+                       {"tokens": jnp.zeros((4, 1), jnp.int32),
+                        "length": jnp.int32(0)}, iters=5)
+        row(f"lm.decode_step.{arch}_us", us,
+            f"tok_per_s={4 / (us * 1e-6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Paper Tables III/IV + Figs 22-25: per-application cores/time/energy and
+speedup / energy-efficiency vs the Tesla K20 baseline.
+
+Prints our analytic-model value next to the paper's reported value and the
+ratio, per application.
+"""
+from benchmarks.common import row
+from repro.core import hw_model as hw
+from repro.core.mapping import map_autoencoder_pretraining, map_network
+
+
+def main():
+    for app, dims in hw.PAPER_NETWORKS.items():
+        if app.startswith("iris"):
+            continue
+        pretraining = app.endswith("_ae") or "dimred" in app or "anomaly" in app
+        cost = hw.network_cost(app, dims, pretraining=pretraining)
+        ref3 = hw.PAPER_TABLE_III.get(app)
+        ref4 = hw.PAPER_TABLE_IV.get(app)
+        se = hw.speedup_and_efficiency(cost, dims)
+
+        derived = f"cores={cost.cores}"
+        if ref3:
+            derived += (f";paper_cores={ref3['cores']}"
+                        f";paper_train_us={ref3['time_us']}"
+                        f";ratio={cost.train.time_us / ref3['time_us']:.2f}")
+        row(f"table3.{app}.train_us", cost.train.time_us, derived)
+        row(f"table3.{app}.train_energy_j", cost.train_total_j * 1e6,
+            f"uJ;paper={ref3['total_j'] * 1e6 if ref3 else 'n/a'}")
+        d4 = f"paper_us={ref4['time_us']}" if ref4 else ""
+        row(f"table4.{app}.infer_us", cost.infer.time_us, d4)
+        row(f"table4.{app}.infer_energy_j", cost.infer_total_j * 1e6, "uJ")
+        row(f"fig22.{app}.train_speedup_vs_k20", se["train_speedup"],
+            "paper: up to 30x")
+        row(f"fig23.{app}.train_energy_eff_vs_k20", se["train_energy_eff"],
+            "paper: 1e4-1e6x")
+        row(f"fig24.{app}.infer_speedup_vs_k20", se["infer_speedup"],
+            "paper: up to 50x")
+        row(f"fig25.{app}.infer_energy_eff_vs_k20", se["infer_energy_eff"],
+            "paper: 1e5-1e6x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all
+  PYTHONPATH=src python -m benchmarks.run table2 fig21   # subset
+
+Each row prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+BENCHES = {
+    "table2": "benchmarks.bench_core_model",        # Table II
+    "tables34": "benchmarks.bench_system_vs_gpu",   # Tables III/IV, Figs 22-25
+    "fig16": "benchmarks.bench_training_curves",    # Fig 16 + VI.B
+    "fig21": "benchmarks.bench_constraints",        # Fig 21
+    "anomaly": "benchmarks.bench_anomaly",          # Figs 18-20
+    "cluster": "benchmarks.bench_clustering",       # section IV.B core
+    "kernels": "benchmarks.bench_kernels",          # Pallas kernels
+    "lm": "benchmarks.bench_lm_step",               # framework LM steps
+    "dryrun": "benchmarks.bench_dryrun_table",      # §Roofline cells (cached)
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(BENCHES)
+    failures = []
+    for key in wanted:
+        mod_name = BENCHES[key]
+        print(f"# === {key} ({mod_name}) ===", flush=True)
+        t0 = time.time()
+        try:
+            mod = __import__(mod_name, fromlist=["main"])
+            mod.main()
+        except Exception:
+            traceback.print_exc()
+            failures.append(key)
+        print(f"# {key} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

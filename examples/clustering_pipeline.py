@@ -1,0 +1,52 @@
+"""Unsupervised big-data pipeline (paper section II): autoencoder
+dimensionality reduction -> k-means clustering -> anomaly detection.
+
+  PYTHONPATH=src python examples/clustering_pipeline.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_apps import PAPER_SPEC
+from repro.core import anomaly, autoencoder as ae, kmeans
+from repro.data import synthetic as syn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+
+    print("== dimensionality reduction: 32-d -> 4-d autoencoder ==")
+    x, labels = syn.gaussian_mixture(key, 600, dim=32, k=5, spread=2.0,
+                                     noise=0.2)
+    enc_layers, _ = ae.pretrain_stack(jax.random.PRNGKey(1), x, [32, 4],
+                                      PAPER_SPEC, lr=0.05, epochs=25,
+                                      batch=16)
+    feats = ae.encode(enc_layers, x, PAPER_SPEC)
+    print(f" features: {x.shape} -> {feats.shape}")
+
+    print("== k-means on reduced features (Manhattan, digital core) ==")
+    init = kmeans.init_plusplus(jax.random.PRNGKey(2), feats, 5)
+    centers, assign, inertia = kmeans.kmeans_fit(feats, init, epochs=15)
+    a, l = np.asarray(assign), np.asarray(labels)
+    purity = sum(np.max(np.bincount(l[a == c], minlength=5))
+                 for c in range(5) if (a == c).any()) / len(l)
+    print(f" purity={purity:.3f}  inertia {float(inertia[0]):.1f} -> "
+          f"{float(inertia[-1]):.1f}")
+
+    print("== anomaly detection on KDD-like traffic (41->15->41 AE) ==")
+    normal, attack = syn.kdd_like(jax.random.PRNGKey(3), 1024, 256)
+    enc, dec, _ = ae.pretrain_layer(jax.random.PRNGKey(4), normal, 41, 15,
+                                    PAPER_SPEC, lr=0.03, epochs=20, batch=16)
+    s_n = anomaly.reconstruction_error([enc, dec], normal, PAPER_SPEC)
+    s_a = anomaly.reconstruction_error([enc, dec], attack, PAPER_SPEC)
+    det = anomaly.detection_at_fpr(s_n, s_a, max_fpr=0.04)
+    print(f" detection at 4% FPR: {det*100:.1f}%  (paper: 96.6%)  "
+          f"AUC={anomaly.auc(s_n, s_a):.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""The paper's core workflow: crossbar-constrained deep-network training.
+
+  PYTHONPATH=src python examples/crossbar_training.py
+
+1. Layer-wise autoencoder pretraining (unsupervised, section III.C-E)
+2. Supervised fine-tuning with the on-chip BP rule (3-bit transport,
+   8-bit errors, pulse updates)
+3. Comparison against the unconstrained float implementation (Fig. 21)
+4. Core allocation + energy estimate from the hardware model (Tables II-III)
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_apps import FLOAT_SPEC, PAPER_SPEC
+from repro.core import autoencoder as ae, crossbar as xb, hw_model as hw
+from repro.data import synthetic as syn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    dims = [64, 30, 10]
+    x, labels = syn.gaussian_mixture(key, 400, dim=64, k=10, spread=1.5,
+                                     noise=0.3)
+    y = syn.labeled_targets(labels, 10)
+
+    print("== layer-wise AE pretraining (constrained) ==")
+    enc_layers, curves = ae.pretrain_stack(
+        jax.random.PRNGKey(1), x, dims[:-1], PAPER_SPEC, lr=0.05, epochs=20,
+        batch=16)
+    for i, c in enumerate(curves):
+        print(f" layer {i}: recon mse {float(c[0]):.4f} -> {float(c[-1]):.4f}")
+
+    print("== supervised fine-tuning ==")
+    head = xb.init_conductances(jax.random.PRNGKey(2), dims[-2], dims[-1],
+                                PAPER_SPEC)
+    layers = enc_layers + [head]
+    layers, curve = ae.finetune_supervised(
+        jax.random.PRNGKey(3), layers, x, y, PAPER_SPEC, lr=1.0, epochs=120,
+        batch=10)
+    out = xb.mlp_forward(layers, x, PAPER_SPEC)
+    acc_c = float((jnp.argmax(out, -1) == labels).mean())
+
+    fl = ae.init_mlp(jax.random.PRNGKey(2), dims, FLOAT_SPEC)
+    fl, _ = ae.finetune_supervised(jax.random.PRNGKey(3), fl, x, y,
+                                   FLOAT_SPEC, lr=1.0, epochs=120, batch=10)
+    acc_f = float((jnp.argmax(xb.mlp_forward(fl, x, FLOAT_SPEC), -1)
+                   == labels).mean())
+    print(f"accuracy constrained={acc_c:.3f} float={acc_f:.3f} "
+          f"(Fig. 21 gap: {100*(acc_f-acc_c):.1f} pts)")
+
+    cost = hw.network_cost("example", dims, pretraining=True)
+    se = hw.speedup_and_efficiency(cost, dims)
+    print(f"hardware model: {cost.cores} cores, "
+          f"{cost.train.time_us:.2f} us/sample train, "
+          f"{cost.train_total_j:.2e} J/sample, "
+          f"{se['train_energy_eff']:.0f}x more energy-efficient than K20")
+
+
+if __name__ == "__main__":
+    main()

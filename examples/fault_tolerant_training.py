@@ -1,0 +1,55 @@
+"""Fault tolerance demo: preemption mid-run, restart from checkpoint,
+bitwise-identical continuation; straggler watchdog events.
+
+  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.data.pipeline import TokenStream
+from repro.optim import adamw
+from repro.runtime import FaultInjector, SimulatedPreemption, Trainer
+
+
+def main():
+    cfg = get_reduced_config("yi-6b")
+    stream = TokenStream(cfg.vocab_size, 32, 4, seed=0)
+    d = tempfile.mkdtemp(prefix="ft_demo_")
+    try:
+        print("== run A: uninterrupted 12 steps ==")
+        ref, hist = Trainer(cfg, adamw(1e-3), ckpt_dir=d + "/ref",
+                            ckpt_every=4, seed=0).run(stream, 12)
+        print(f" final loss {hist[-1]['loss']:.4f}")
+
+        print("== run B: preempted at step 8, restarted ==")
+        inj = FaultInjector(preempt_at_step=8)
+        t1 = Trainer(cfg, adamw(1e-3), ckpt_dir=d + "/int", ckpt_every=4,
+                     fault_injector=inj, seed=0)
+        try:
+            t1.run(stream, 12)
+        except SimulatedPreemption as e:
+            print(f" PREEMPTED: {e}")
+        t2 = Trainer(cfg, adamw(1e-3), ckpt_dir=d + "/int", ckpt_every=4,
+                     seed=0)
+        state, hist2 = t2.run(stream, 12)
+        print(f" resumed from step 8, final loss {hist2[-1]['loss']:.4f}")
+
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(jax.tree.leaves(state.params),
+                                   jax.tree.leaves(ref.params)))
+        print(f" bitwise-identical to uninterrupted run: {same}")
+        if t2.watchdog.events:
+            print(f" straggler events: {t2.watchdog.events}")
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+from repro.configs.base import (  # noqa: F401
+    ARCH_MODULES,
+    SHAPES,
+    ModelConfig,
+    get_config,
+    get_reduced_config,
+    list_archs,
+    shape_applicable,
+)

@@ -1,0 +1,28 @@
+"""The paper's primary contribution: crossbar-constrained training.
+
+Submodules:
+  quantization  transport quantizers (3-bit ADC, 8-bit errors, pulses)
+  crossbar      differential-pair crossbar layer + paper training rule
+  mapping       layer -> 400x100 core allocation (section V.B)
+  hw_model      analytic area/power/energy model (Tables II-IV, Figs 22-25)
+  autoencoder   layer-wise pretraining + supervised fine-tune
+  kmeans        Manhattan-distance clustering (the digital core)
+  anomaly       reconstruction-error anomaly detection
+"""
+from repro.core.crossbar import (  # noqa: F401
+    CrossbarSpec,
+    crossbar_apply,
+    hard_sigmoid,
+    init_conductances,
+    mlp_forward,
+    paper_backprop_step,
+)
+from repro.core.quantization import (  # noqa: F401
+    QTensor,
+    adc_quantize,
+    adc_quantize_ste,
+    error_quantize,
+    error_quantize_ste,
+    fake_quant,
+    pulse_discretize,
+)

@@ -1,0 +1,51 @@
+"""Autoencoder anomaly detection (paper section VI.C, Figs 18-20).
+
+Train the AE only on normal traffic; at evaluation, the reconstruction
+distance separates normal from attack packets.  The paper reports ~96.6%
+detection at ~4% false-positive on KDD with a 41->15->41 network.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+from repro.core.crossbar import CrossbarSpec
+
+
+def reconstruction_error(layers, x: jax.Array, spec: CrossbarSpec
+                         ) -> jax.Array:
+    """Per-sample Manhattan distance between input and reconstruction (the
+    paper measures 'distance between original data and reconstructed
+    data')."""
+    recon = xb.mlp_forward(layers, x, spec)
+    return jnp.sum(jnp.abs(recon - x), axis=-1)
+
+
+def detection_curve(scores_normal: jax.Array, scores_attack: jax.Array,
+                    n_thresholds: int = 200
+                    ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sweep the decision parameter (Fig. 20): returns (thresholds,
+    detection_rate, false_positive_rate)."""
+    lo = jnp.minimum(scores_normal.min(), scores_attack.min())
+    hi = jnp.maximum(scores_normal.max(), scores_attack.max())
+    ts = jnp.linspace(lo, hi, n_thresholds)
+    det = (scores_attack[None, :] > ts[:, None]).mean(axis=1)
+    fpr = (scores_normal[None, :] > ts[:, None]).mean(axis=1)
+    return ts, det, fpr
+
+
+def detection_at_fpr(scores_normal, scores_attack, max_fpr: float = 0.04
+                     ) -> float:
+    """Best detection rate achievable at <= max_fpr false positives — the
+    paper's '96.6% ... with a 4% false detection rate' operating point."""
+    _, det, fpr = detection_curve(scores_normal, scores_attack)
+    ok = jnp.where(fpr <= max_fpr, det, 0.0)
+    return float(jnp.max(ok))
+
+
+def auc(scores_normal: jax.Array, scores_attack: jax.Array) -> float:
+    """Probability an attack scores above a normal sample (rank AUC)."""
+    diff = scores_attack[:, None] > scores_normal[None, :]
+    ties = scores_attack[:, None] == scores_normal[None, :]
+    return float(diff.mean() + 0.5 * ties.mean())

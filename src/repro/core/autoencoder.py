@@ -1,0 +1,120 @@
+"""Autoencoder with layer-wise unsupervised pretraining (paper section III.C-E).
+
+The paper trains deep networks by (1) greedily pretraining each hidden layer
+as a two-layer autoencoder — the temporarily-added decoder "tries to learn
+the inputs applied to the first layer" — then (2) stacking the encoders and
+fine-tuning with supervised backprop.  Both phases run under the crossbar
+constraints (3-bit transport, 8-bit errors, pulse updates) when
+``spec`` enables them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import crossbar as xb
+from repro.core.crossbar import CrossbarSpec
+
+
+def init_mlp(key: jax.Array, dims: list[int], spec: CrossbarSpec
+             ) -> list[dict[str, jax.Array]]:
+    keys = jax.random.split(key, len(dims) - 1)
+    return [xb.init_conductances(k, i, o, spec)
+            for k, (i, o) in zip(keys, zip(dims, dims[1:]))]
+
+
+def encode(layers: list[dict[str, jax.Array]], x: jax.Array,
+           spec: CrossbarSpec) -> jax.Array:
+    return xb.mlp_forward(layers, x, spec)
+
+
+def reconstruction(enc_layers, dec_layer, x, spec: CrossbarSpec) -> jax.Array:
+    h = encode(enc_layers, x, spec)
+    return xb.crossbar_apply(dec_layer, h, spec)
+
+
+def pretrain_layer(key: jax.Array, x_repr: jax.Array, fan_in: int,
+                   hidden: int, spec: CrossbarSpec, *, lr: float,
+                   epochs: int, batch: int
+                   ) -> tuple[dict, dict, jax.Array]:
+    """Train one (encoder, temp-decoder) pair so decoder(encoder(x)) ~ x.
+
+    Returns (encoder_params, decoder_params, losses[epochs]).  Uses the
+    paper's stochastic-BP circuit rule (crossbar.paper_backprop_step).
+    """
+    kenc, kdec = jax.random.split(key)
+    enc = xb.init_conductances(kenc, fan_in, hidden, spec)
+    dec = xb.init_conductances(kdec, hidden, fan_in, spec)
+    n = x_repr.shape[0]
+
+    def epoch_step(carry, ek):
+        enc, dec = carry
+        perm = jax.random.permutation(ek, n)
+
+        def batch_step(carry, idx):
+            enc, dec = carry
+            xb_ = x_repr[idx]
+            (enc, dec), err = _ae_bp(enc, dec, xb_, spec, lr)
+            return (enc, dec), jnp.mean(err ** 2)
+
+        idxs = perm[: (n // batch) * batch].reshape(-1, batch)
+        (enc, dec), losses = jax.lax.scan(batch_step, (enc, dec), idxs)
+        return (enc, dec), losses.mean()
+
+    (enc, dec), losses = jax.lax.scan(
+        epoch_step, (enc, dec), jax.random.split(kdec, epochs))
+    return enc, dec, losses
+
+
+def _ae_bp(enc, dec, x, spec, lr):
+    layers, err = xb.paper_backprop_step([enc, dec], x, x, spec, lr)
+    return (layers[0], layers[1]), err
+
+
+def pretrain_stack(key: jax.Array, x: jax.Array, dims: list[int],
+                   spec: CrossbarSpec, *, lr: float = 0.05, epochs: int = 20,
+                   batch: int = 16) -> tuple[list[dict], list[jax.Array]]:
+    """Greedy layer-wise pretraining over ``dims`` (dims[0] = input dim).
+
+    Returns (encoder_layers, per-layer loss curves).  Representations feed
+    forward through already-trained encoders, as in the paper.
+    """
+    enc_layers: list[dict] = []
+    curves: list[jax.Array] = []
+    repr_x = x
+    keys = jax.random.split(key, len(dims) - 1)
+    for k, (fi, h) in zip(keys, zip(dims, dims[1:])):
+        enc, _dec, losses = pretrain_layer(
+            k, repr_x, fi, h, spec, lr=lr, epochs=epochs, batch=batch)
+        enc_layers.append(enc)
+        curves.append(losses)
+        repr_x = xb.crossbar_apply(enc, repr_x, spec)
+    return enc_layers, curves
+
+
+def finetune_supervised(key: jax.Array, layers: list[dict], x: jax.Array,
+                        y: jax.Array, spec: CrossbarSpec, *, lr: float = 0.05,
+                        epochs: int = 30, batch: int = 16
+                        ) -> tuple[list[dict], jax.Array]:
+    """Supervised fine-tuning of the pretrained stack (paper section II:
+    "supervised fine tuning is performed on the pre trained weights")."""
+    n = x.shape[0]
+
+    def epoch_step(carry, ek):
+        layers = carry
+        perm = jax.random.permutation(ek, n)
+        idxs = perm[: (n // batch) * batch].reshape(-1, batch)
+
+        def batch_step(layers, idx):
+            new_layers, err = xb.paper_backprop_step(
+                list(layers), x[idx], y[idx], spec, lr)
+            return tuple(new_layers), jnp.mean(err ** 2)
+
+        layers, losses = jax.lax.scan(batch_step, layers, idxs)
+        return layers, losses.mean()
+
+    layers_t, curve = jax.lax.scan(
+        epoch_step, tuple(layers), jax.random.split(key, epochs))
+    return list(layers_t), curve

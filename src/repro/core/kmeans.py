@@ -1,0 +1,111 @@
+"""k-means clustering with Manhattan distance — the digital clustering core.
+
+Mirrors section IV.B: the hardware core evaluates Manhattan distances to up
+to 32 cluster centers (dimension <= 32 after AE reduction) in parallel,
+accumulates per-cluster sample sums and counts overlapped with the next
+sample's distance calculation, and divides at epoch end to get new centers.
+
+``kmeans_fit`` is the single-host reference; ``distributed_assign_update``
+is the shard_map building block for pod-scale clustering (per-shard partial
+sums + counts, psum-reduced — the same streaming accumulate-then-divide
+schedule as the hardware core).  The Pallas kernel (kernels/kmeans.py)
+implements the assignment step with the hardware core's tile limits.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# Hardware core limits (section IV.B) — the kernel tile size.
+MAX_CLUSTERS = 32
+MAX_DIM = 32
+
+
+def manhattan_distances(x: jax.Array, centers: jax.Array) -> jax.Array:
+    """(n, d), (k, d) -> (n, k) sum |x - c|."""
+    return jnp.sum(jnp.abs(x[:, None, :] - centers[None, :, :]), axis=-1)
+
+
+def assign(x: jax.Array, centers: jax.Array, *, use_kernel: bool = False
+           ) -> jax.Array:
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.kmeans_assign(x, centers)
+    return jnp.argmin(manhattan_distances(x, centers), axis=-1)
+
+
+def accumulate(x: jax.Array, assignment: jax.Array, k: int
+               ) -> tuple[jax.Array, jax.Array]:
+    """Per-cluster sample sums and counts (the center-accumulator registers
+    and counters of Fig. 13)."""
+    onehot = jax.nn.one_hot(assignment, k, dtype=x.dtype)
+    sums = onehot.T @ x
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+def update_centers(sums: jax.Array, counts: jax.Array, centers: jax.Array
+                   ) -> jax.Array:
+    """New centers = accumulated sums / counts; empty clusters keep their
+    old center (hardware: divide-by-zero never triggers, the register just
+    isn't refreshed)."""
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new = sums / safe
+    return jnp.where(counts[:, None] > 0, new, centers)
+
+
+@partial(jax.jit, static_argnums=(2, 3))
+def kmeans_fit(x: jax.Array, init_centers: jax.Array, epochs: int = 10,
+               use_kernel: bool = False
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Full-batch Lloyd iterations with Manhattan assignment.
+
+    Returns (centers, assignment, inertia_per_epoch).
+    """
+    k = init_centers.shape[0]
+
+    def epoch(centers, _):
+        d = manhattan_distances(x, centers)
+        a = jnp.argmin(d, axis=-1)
+        inertia = jnp.sum(jnp.min(d, axis=-1))
+        sums, counts = accumulate(x, a, k)
+        return update_centers(sums, counts, centers), inertia
+
+    centers, inertia = jax.lax.scan(epoch, init_centers, None, length=epochs)
+    return centers, assign(x, centers), inertia
+
+
+def init_from_data(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    idx = jax.random.choice(key, x.shape[0], (k,), replace=False)
+    return x[idx]
+
+
+def init_plusplus(key: jax.Array, x: jax.Array, k: int) -> jax.Array:
+    """k-means++ seeding (distance-weighted), Manhattan metric."""
+    keys = jax.random.split(key, k)
+    first = jax.random.randint(keys[0], (), 0, x.shape[0])
+    centers = [x[first]]
+    for i in range(1, k):
+        d = manhattan_distances(x, jnp.stack(centers)).min(axis=1)
+        p = d / jnp.maximum(d.sum(), 1e-9)
+        idx = jax.random.choice(keys[i], x.shape[0], (), p=p)
+        centers.append(x[idx])
+    return jnp.stack(centers)
+
+
+# ---------------------------------------------------------------------------
+# Distributed (shard_map) building block
+# ---------------------------------------------------------------------------
+
+def distributed_epoch(x_shard: jax.Array, centers: jax.Array, k: int,
+                      axis_name: str | tuple[str, ...]) -> jax.Array:
+    """One k-means epoch where ``x_shard`` is this device's slice of the
+    samples and ``centers`` is replicated.  psum reproduces the hardware's
+    accumulate-then-divide with the accumulation distributed."""
+    a = assign(x_shard, centers)
+    sums, counts = accumulate(x_shard, a, k)
+    sums = jax.lax.psum(sums, axis_name)
+    counts = jax.lax.psum(counts, axis_name)
+    return update_centers(sums, counts, centers)

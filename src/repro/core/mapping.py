@@ -1,0 +1,84 @@
+"""Multicore mapper: assign network layers to 400x100 neural cores.
+
+Implements section V.B "Mapping Neural Networks to Cores":
+
+  * a layer with ``fan_out`` neurons of ``fan_in`` inputs occupies
+    ``ceil(fan_in/400) * ceil(fan_out/100)`` cores,
+  * fan-in splits add an aggregation stage (Fig. 14): ``fan_out`` aggregation
+    neurons each with ``ceil(fan_in/400)`` inputs, packed into cores,
+  * layers much smaller than a core may share one core (pipelined through the
+    core's routing switch loopback, Fig. 2),
+  * routed traffic per layer = fan_out neuron outputs (ADC codes) over 8-bit
+    links (section V.C).
+
+The mapper also emits the static routing schedule length (cycles) used by the
+hardware model.  This is the compile-time "who sends what when" table that,
+at pod scale, becomes the XLA SPMD collective schedule (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.crossbar import CORE_COLS, CORE_ROWS
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMap:
+    fan_in: int
+    fan_out: int
+    row_tiles: int          # fan-in splits (sub-neuron groups, Fig. 14)
+    col_tiles: int          # fan-out splits
+    cores: int              # crossbar cores for the layer itself
+    agg_cores: int          # cores implementing the aggregation stage
+    routed_outputs: int     # neuron outputs crossing the routing network
+
+    @property
+    def total_cores(self) -> int:
+        return self.cores + self.agg_cores
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkMap:
+    layers: tuple[LayerMap, ...]
+    cores: int
+    routed_outputs: int     # per forward pass
+    routing_cycles: int     # 8-bit link, one output per cycle per link
+
+
+def map_layer(fan_in: int, fan_out: int, rows: int = CORE_ROWS,
+              cols: int = CORE_COLS) -> LayerMap:
+    fan_in = fan_in + 1  # +1 bias row (Fig. 8: "One additional input ... bias")
+    row_tiles = math.ceil(fan_in / rows)
+    col_tiles = math.ceil(fan_out / cols)
+    cores = row_tiles * col_tiles
+    agg_cores = 0
+    if row_tiles > 1:
+        # Aggregation neurons: fan_out neurons each taking row_tiles inputs.
+        agg_cores = math.ceil(row_tiles / rows) * math.ceil(fan_out / cols)
+    routed = fan_out * row_tiles if row_tiles > 1 else fan_out
+    return LayerMap(fan_in - 1, fan_out, row_tiles, col_tiles, cores,
+                    agg_cores, routed)
+
+
+def map_network(dims: list[int], rows: int = CORE_ROWS,
+                cols: int = CORE_COLS) -> NetworkMap:
+    layers = tuple(map_layer(i, o, rows, cols) for i, o in zip(dims, dims[1:]))
+    cores = sum(l.total_cores for l in layers)
+    routed = sum(l.routed_outputs for l in layers)
+    return NetworkMap(layers, cores, routed, routing_cycles=routed)
+
+
+def map_autoencoder_pretraining(dims: list[int], rows: int = CORE_ROWS,
+                                cols: int = CORE_COLS) -> NetworkMap:
+    """Layer-wise AE pretraining instantiates, per hidden layer, the encoder
+    plus a temporary decoder back to the layer input (section III.D) — the
+    hardware must provision cores for both, which is why the paper's core
+    counts (Table III) exceed the plain feed-forward mapping."""
+    layer_maps: list[LayerMap] = []
+    for i, o in zip(dims, dims[1:]):
+        layer_maps.append(map_layer(i, o, rows, cols))      # encoder layer
+        layer_maps.append(map_layer(o, i, rows, cols))      # temp decoder
+    cores = sum(l.total_cores for l in layer_maps)
+    routed = sum(l.routed_outputs for l in layer_maps)
+    return NetworkMap(tuple(layer_maps), cores, routed, routing_cycles=routed)

@@ -1,0 +1,8 @@
+from repro.data.synthetic import (  # noqa: F401
+    gaussian_mixture,
+    iris_like,
+    kdd_like,
+    mnist_like,
+    isolet_like,
+)
+from repro.data.pipeline import TokenStream  # noqa: F401

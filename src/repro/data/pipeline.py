@@ -1,0 +1,78 @@
+"""Deterministic, resumable, shardable data pipeline.
+
+The paper streams training data from 3D-stacked DRAM through a DMA engine —
+the data path is a deterministic producer decoupled from compute.  At pod
+scale the analogous requirements are:
+
+  * determinism: batch at step ``s`` is a pure function of (seed, s) so a
+    restarted job replays the identical stream (fault tolerance),
+  * shardability: each data-parallel host materializes only its slice,
+  * zero coordination: no cross-host state, no file offsets to checkpoint —
+    the checkpoint stores only the integer step.
+
+``TokenStream`` synthesizes language-model token batches with a mixture of
+Zipfian unigram draws and repeated n-gram motifs so the cross-entropy is
+learnable (loss decreases measurably within a few hundred steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    motif_len: int = 16
+    n_motifs: int = 64
+
+    def _motifs(self) -> jax.Array:
+        key = jax.random.PRNGKey(self.seed ^ 0x5EED)
+        return jax.random.randint(
+            key, (self.n_motifs, self.motif_len), 0, self.vocab_size)
+
+    def batch_at(self, step: int, *, shard: int = 0, num_shards: int = 1
+                 ) -> dict[str, jax.Array]:
+        """Batch for ``step``, restricted to this host's shard.
+
+        tokens: (local_batch, seq_len) int32; the label stream is the input
+        shifted by one (next-token prediction).
+        """
+        assert self.global_batch % num_shards == 0
+        local = self.global_batch // num_shards
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), step), shard)
+        kz, km, kpos = jax.random.split(key, 3)
+
+        # Zipfian unigrams: rank r has mass ~ 1/(r+1).
+        ranks = jnp.arange(self.vocab_size, dtype=jnp.float32)
+        logits = -jnp.log1p(ranks)
+        base = jax.random.categorical(
+            kz, logits, shape=(local, self.seq_len + 1))
+
+        # Overwrite random windows with repeated motifs (learnable signal).
+        motifs = self._motifs()
+        midx = jax.random.randint(km, (local,), 0, self.n_motifs)
+        pos = jax.random.randint(
+            kpos, (local,), 0, max(self.seq_len + 1 - self.motif_len, 1))
+        cols = jnp.arange(self.seq_len + 1)[None, :]
+        in_motif = (cols >= pos[:, None]) & (cols < pos[:, None] + self.motif_len)
+        motif_col = jnp.clip(cols - pos[:, None], 0, self.motif_len - 1)
+        motif_vals = motifs[midx[:, None], motif_col]
+        seq = jnp.where(in_motif, motif_vals, base)
+
+        return {"tokens": seq[:, :-1].astype(jnp.int32),
+                "labels": seq[:, 1:].astype(jnp.int32)}
+
+    def host_iterator(self, start_step: int, *, shard: int = 0,
+                      num_shards: int = 1):
+        step = start_step
+        while True:
+            yield step, self.batch_at(step, shard=shard, num_shards=num_shards)
+            step += 1

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+crossbar.py  fwd / bwd / pulse-update crossbar tiles (pl.pallas_call + BlockSpec)
+flash_attention.py  fused online-softmax attention (LM prefill hot-spot)
+kmeans.py    Manhattan-distance assignment (the digital clustering core)
+ops.py       jit'd wrappers (interpret mode on CPU, compiled on TPU)
+ref.py       pure-jnp oracles used by tests/test_kernels.py
+"""

@@ -1,0 +1,194 @@
+"""Pallas TPU kernels for the crossbar layer (forward / backward / update).
+
+Hardware adaptation (DESIGN.md §2): the paper's 400x200 analog crossbar tile
+becomes an MXU-aligned VMEM tile.  The default logical tile is 512x128
+(fan-in x neurons): the *bounded-tile* discipline survives, the exact
+dimensions are re-derived for the MXU (128-multiples) and a VMEM working set
+of  bm*bk + bk*bn*2 + bm*bn  fp32 words  =  128*512 + 512*128*2 + 128*128
+≈ 0.9 MB — comfortably inside the ~16 MB v5e VMEM even with double
+buffering.
+
+Each kernel fuses what the paper's core fuses:
+  fwd:    differential-pair subtraction + matmul + hard-sigmoid epilogue
+  bwd:    8-bit error codes dequantized in-kernel + transposed matmul
+  update: outer-product + pulse discretization + conductance clipping
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Logical tile: paper's 400(+bias)x100 crossbar, MXU-aligned.
+TILE_ROWS = 512     # fan-in per tile  (paper: 400)
+TILE_COLS = 128     # neurons per tile (paper: 100)
+TILE_M = 128        # batch tile
+
+
+def _dimension_semantics(n_parallel: int, n_arbitrary: int):
+    try:  # only meaningful on real TPU lowering
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.CompilerParams(
+            dimension_semantics=("parallel",) * n_parallel
+            + ("arbitrary",) * n_arbitrary)
+    except Exception:
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Forward: y = h(x @ (G+ - G-))
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(x_ref, gp_ref, gm_ref, o_ref, *, n_k: int, activation: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = gp_ref[...].astype(jnp.float32) - gm_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        if activation:
+            o_ref[...] = jnp.clip(o_ref[...] * 0.25, -0.5, 0.5)
+
+
+def crossbar_fwd_kernel(x: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
+                        *, activation: bool = True,
+                        bm: int = TILE_M, bk: int = TILE_ROWS,
+                        bn: int = TILE_COLS,
+                        interpret: bool = True) -> jax.Array:
+    """x: (M, K); g±: (K, N) -> (M, N) fp32."""
+    M, K = x.shape
+    _, N = g_plus.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, (x.shape, (bm, bk, bn))
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, n_k=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        compiler_params=None if interpret else _dimension_semantics(2, 1),
+        interpret=interpret,
+    )(x, g_plus, g_minus)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dx = dy @ (G+ - G-)^T   (contracting the neuron axis)
+# ---------------------------------------------------------------------------
+
+def _bwd_kernel(dy_ref, gp_ref, gm_ref, o_ref, *, n_k: int):
+    n = pl.program_id(2)
+
+    @pl.when(n == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = gp_ref[...].astype(jnp.float32) - gm_ref[...].astype(jnp.float32)
+    # dy (bm, bn) x w (bk, bn)^T -> (bm, bk)
+    o_ref[...] += jax.lax.dot_general(
+        dy_ref[...].astype(jnp.float32), w,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def crossbar_bwd_kernel(dy: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
+                        *, bm: int = TILE_M, bk: int = TILE_ROWS,
+                        bn: int = TILE_COLS,
+                        interpret: bool = True) -> jax.Array:
+    """dy: (M, N); g±: (K, N) -> dx (M, K) fp32."""
+    M, N = dy.shape
+    K, _ = g_plus.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (M // bm, K // bk, N // bn)
+    return pl.pallas_call(
+        functools.partial(_bwd_kernel, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
+        compiler_params=None if interpret else _dimension_semantics(2, 1),
+        interpret=interpret,
+    )(dy, g_plus, g_minus)
+
+
+# ---------------------------------------------------------------------------
+# Update: G± <- clip(G± ± pulse(lr * x^T delta)/2)
+# ---------------------------------------------------------------------------
+
+def _upd_kernel(gp_ref, gm_ref, x_ref, d_ref, gp_out, gm_out, *,
+                n_m: int, lr: float, max_dw: float, levels: int, w_max: float):
+    # gp_out doubles as the fp32 dw accumulator until the last m step
+    # (its (i, j) block is revisited across the m axis).
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        gp_out[...] = jnp.zeros_like(gp_out)
+
+    # accumulate dw tile = 2*lr * x^T @ delta over the batch dimension
+    gp_out[...] += 2.0 * lr * jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), d_ref[...].astype(jnp.float32),
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(m == n_m - 1)
+    def _apply():
+        unit = max_dw / levels
+        dw = jnp.clip(jnp.round(gp_out[...] / unit), -levels, levels) * unit
+        gp_out[...] = jnp.clip(gp_ref[...].astype(jnp.float32) + 0.5 * dw,
+                               0.0, w_max)
+        gm_out[...] = jnp.clip(gm_ref[...].astype(jnp.float32) - 0.5 * dw,
+                               0.0, w_max)
+
+
+def pulse_update_kernel(g_plus: jax.Array, g_minus: jax.Array, x: jax.Array,
+                        delta: jax.Array, *, lr: float, max_dw: float = 0.05,
+                        levels: int = 128, w_max: float = 1.0,
+                        bm: int = TILE_M, bk: int = TILE_ROWS,
+                        bn: int = TILE_COLS, interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """x: (M, K); delta: (M, N); g±: (K, N) -> updated (g+, g-)."""
+    M, K = x.shape
+    _, N = delta.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (K // bk, N // bn, M // bm)
+    out = pl.pallas_call(
+        functools.partial(_upd_kernel, n_m=grid[2], lr=lr, max_dw=max_dw,
+                          levels=levels, w_max=w_max),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+            pl.BlockSpec((bm, bk), lambda i, j, m: (m, i)),
+            pl.BlockSpec((bm, bn), lambda i, j, m: (m, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+        ],
+        compiler_params=None if interpret else _dimension_semantics(2, 1),
+        interpret=interpret,
+    )(g_plus, g_minus, x, delta)
+    return out[0], out[1]

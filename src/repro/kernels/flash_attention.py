@@ -1,0 +1,95 @@
+"""Pallas TPU flash-attention kernel (fused online-softmax attention).
+
+The chunked-attention layer (layers/attention.py) expresses the flash
+schedule in jnp ops; this kernel fuses one (q-block × full-KV) pass into a
+single pl.pallas_call so scores never leave VMEM — the TPU-native analogue
+of the paper's "process a whole layer inside the core" discipline applied
+to the LM hot-spot.
+
+Grid: (batch*heads, Sq/bq); the kv loop runs inside the kernel body with
+``jax.lax.fori_loop`` over VMEM-resident KV blocks of the full head.  Block
+sizes are MXU-aligned; VMEM working set per step =
+bq*hd + 2*bk*hd + bq*bk floats ≈ 0.5 MB at (128, 128, 128).
+
+Causal masking uses absolute positions derived from the grid index.
+Supports GQA by pre-broadcasting KV heads in the wrapper (ops-level
+einsum stays the reference path for training; this kernel targets
+inference prefill).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bk: int, scale: float,
+                  causal: bool):
+    bq, hd = q_ref.shape
+    Skv = k_ref.shape[0]
+    n_kb = Skv // bk
+    i = pl.program_id(1)                     # q block index
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * bk, bk), :]
+        v = v_ref[pl.dslice(j * bk, bk), :]
+        s = jax.lax.dot_general(q, k.astype(jnp.float32),
+                                (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qi = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            ki = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(ki <= qi, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=1)
+        acc = acc * corr[:, None] + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    if causal:
+        # kv blocks past the diagonal are fully masked: skip them
+        upper = jnp.minimum(((i + 1) * bq + bk - 1) // bk, n_kb)
+    else:
+        upper = n_kb
+    m, l, acc = jax.lax.fori_loop(0, upper, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           scale: float, causal: bool = True,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (BH, Sq, hd); k, v: (BH, Skv, hd) — heads pre-flattened/broadcast.
+
+    Returns (BH, Sq, hd) in q's dtype.
+    """
+    BH, Sq, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    grid = (BH, Sq // bq)
+    return pl.pallas_call(
+        functools.partial(_flash_kernel, bk=bk, scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, bq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, Skv, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, Skv, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,44 @@
+"""Pallas kernel for the digital clustering core's assignment step.
+
+The hardware core evaluates Manhattan distances to <= 32 cluster centers in
+parallel for each streamed sample (Fig. 13).  The TPU tile keeps the full
+(k, d) center block resident in VMEM (k, d <= 128 — generalizing the
+hardware's 32x32 limit to the lane width) and streams sample blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+SAMPLE_TILE = 256
+
+
+def _assign_kernel(x_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)          # (bn, d)
+    c = c_ref[...].astype(jnp.float32)          # (k, d)
+    d = jnp.sum(jnp.abs(x[:, None, :] - c[None, :, :]), axis=-1)  # (bn, k)
+    o_ref[...] = jnp.argmin(d, axis=-1).astype(jnp.int32)
+
+
+def kmeans_assign_kernel(x: jax.Array, centers: jax.Array, *,
+                         bn: int = SAMPLE_TILE,
+                         interpret: bool = True) -> jax.Array:
+    """x: (n, d); centers: (k, d) -> assignment (n,) int32."""
+    n, d = x.shape
+    k = centers.shape[0]
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    return pl.pallas_call(
+        _assign_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, centers)

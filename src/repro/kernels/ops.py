@@ -1,0 +1,130 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode — the kernel body
+runs in Python with real BlockSpec tiling semantics, so the tests validate
+the tiling/accumulation logic.  On TPU ``interpret`` flips off automatically.
+
+Shapes are padded to tile multiples here (the paper pads networks into
+crossbar tiles the same way, section V.B); results are sliced back.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import crossbar as xbk
+from repro.kernels import kmeans as kmk
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile(dim: int, tile: int) -> tuple[int, int]:
+    """(block_size, padded_dim) for one axis."""
+    if dim <= tile:
+        return dim, dim
+    pad = (-dim) % tile
+    return tile, dim + pad
+
+
+def _pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    pads = [(0, s - d) for d, s in zip(x.shape, shape)]
+    return jnp.pad(x, pads) if any(p for _, p in pads) else x
+
+
+@partial(jax.jit, static_argnames=("activation", "interpret"))
+def crossbar_fwd(x, g_plus, g_minus, *, activation: bool = True,
+                 interpret: bool | None = None):
+    """Tiled y = h(x @ (G+ - G-)).  x (..., K); g± (K, N) -> (..., N) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = x.shape[:-1]
+    K, N = g_plus.shape
+    x2 = x.reshape(-1, K)
+    M = x2.shape[0]
+    bm, Mp = _tile(M, xbk.TILE_M)
+    bk, Kp = _tile(K, xbk.TILE_ROWS)
+    bn, Np = _tile(N, xbk.TILE_COLS)
+    y = xbk.crossbar_fwd_kernel(
+        _pad_to(x2, (Mp, Kp)), _pad_to(g_plus, (Kp, Np)),
+        _pad_to(g_minus, (Kp, Np)), activation=activation,
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return y[:M, :N].reshape(*lead, N)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def crossbar_bwd(dy, g_plus, g_minus, *, interpret: bool | None = None):
+    """dx = dy @ (G+ - G-)^T.  dy (..., N); g± (K, N) -> (..., K) f32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    lead = dy.shape[:-1]
+    K, N = g_plus.shape
+    dy2 = dy.reshape(-1, N)
+    M = dy2.shape[0]
+    bm, Mp = _tile(M, xbk.TILE_M)
+    bk, Kp = _tile(K, xbk.TILE_ROWS)
+    bn, Np = _tile(N, xbk.TILE_COLS)
+    dx = xbk.crossbar_bwd_kernel(
+        _pad_to(dy2, (Mp, Np)), _pad_to(g_plus, (Kp, Np)),
+        _pad_to(g_minus, (Kp, Np)), bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return dx[:M, :K].reshape(*lead, K)
+
+
+@partial(jax.jit, static_argnames=("lr", "max_dw", "levels", "w_max",
+                                   "interpret"))
+def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
+                 max_dw: float = 0.05, levels: int = 128, w_max: float = 1.0,
+                 interpret: bool | None = None):
+    """Fused rank-1 pulse update.  x (..., K); delta (..., N); g± (K, N)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    K, N = g_plus.shape
+    x2 = x.reshape(-1, K)
+    d2 = delta.reshape(-1, N)
+    M = x2.shape[0]
+    bm, Mp = _tile(M, xbk.TILE_M)
+    bk, Kp = _tile(K, xbk.TILE_ROWS)
+    bn, Np = _tile(N, xbk.TILE_COLS)
+    gp2, gm2 = xbk.pulse_update_kernel(
+        _pad_to(g_plus, (Kp, Np)), _pad_to(g_minus, (Kp, Np)),
+        _pad_to(x2, (Mp, Kp)), _pad_to(d2, (Mp, Np)),
+        lr=lr, max_dw=max_dw, levels=levels, w_max=w_max,
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return gp2[:K, :N], gm2[:K, :N]
+
+
+@partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    interpret: bool | None = None):
+    """Fused attention.  q: (B, Sq, H, hd); k, v: (B, Skv, K, hd), H % K == 0.
+
+    GQA handled by broadcasting KV heads in the wrapper; heads flatten into
+    the kernel grid's batch dim.
+    """
+    from repro.kernels import flash_attention as fak
+    interpret = _default_interpret() if interpret is None else interpret
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    kb = jnp.repeat(k, G, axis=2)          # (B, Skv, H, hd)
+    vb = jnp.repeat(v, G, axis=2)
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, hd)
+    kf = jnp.moveaxis(kb, 2, 1).reshape(B * H, Skv, hd)
+    vf = jnp.moveaxis(vb, 2, 1).reshape(B * H, Skv, hd)
+    bq = 128 if Sq % 128 == 0 else Sq
+    bk = 128 if Skv % 128 == 0 else Skv
+    o = fak.flash_attention_kernel(qf, kf, vf, scale=hd ** -0.5,
+                                   causal=causal, bq=bq, bk=bk,
+                                   interpret=interpret)
+    return jnp.moveaxis(o.reshape(B, H, Sq, hd), 1, 2)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def kmeans_assign(x, centers, *, interpret: bool | None = None):
+    """Manhattan assignment.  x (n, d); centers (k, d) -> (n,) int32."""
+    interpret = _default_interpret() if interpret is None else interpret
+    n, d = x.shape
+    bn, np_ = _tile(n, kmk.SAMPLE_TILE)
+    xp = _pad_to(x, (np_, d))
+    out = kmk.kmeans_assign_kernel(xp, centers, bn=bn, interpret=interpret)
+    return out[:n]

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the kernels
+are allclose-tested against, tests/test_kernels.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def crossbar_fwd_ref(x: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
+                     *, activation: bool = True) -> jax.Array:
+    """y = h(x @ (G+ - G-)); h = hard-sigmoid (paper Eq. 3)."""
+    dp = x.astype(jnp.float32) @ (g_plus - g_minus).astype(jnp.float32)
+    if activation:
+        dp = jnp.clip(dp * 0.25, -0.5, 0.5)
+    return dp
+
+
+def crossbar_bwd_ref(dy: jax.Array, g_plus: jax.Array, g_minus: jax.Array
+                     ) -> jax.Array:
+    """dx = dy @ (G+ - G-)^T  (paper Eq. 7, backward through the crossbar)."""
+    w = (g_plus - g_minus).astype(jnp.float32)
+    return dy.astype(jnp.float32) @ w.T
+
+
+def pulse_update_ref(g_plus: jax.Array, g_minus: jax.Array, x: jax.Array,
+                     delta: jax.Array, *, lr: float, max_dw: float,
+                     levels: int, w_max: float
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Paper III.F step 3: dw = 2*lr*(x^T @ delta), discretized into unit
+    pulses; columns move +dw/2 / -dw/2; conductances clip to [0, w_max]."""
+    dw = 2.0 * lr * (x.astype(jnp.float32).T @ delta.astype(jnp.float32))
+    unit = max_dw / levels
+    dw = jnp.clip(jnp.round(dw / unit), -levels, levels) * unit
+    gp = jnp.clip(g_plus + 0.5 * dw, 0.0, w_max)
+    gm = jnp.clip(g_minus - 0.5 * dw, 0.0, w_max)
+    return gp, gm
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """Naive softmax attention oracle.  q (B,Sq,H,hd); k/v (B,Skv,K,hd)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qh = q.reshape(B, Sq, K, G, hd)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        qi = jnp.arange(Sq)[:, None]
+        ki = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where((ki <= qi)[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, v.astype(jnp.float32))
+    return jnp.moveaxis(o, 3, 1).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def kmeans_assign_ref(x: jax.Array, centers: jax.Array) -> jax.Array:
+    """Manhattan-distance argmin assignment (paper Fig. 13)."""
+    d = jnp.sum(jnp.abs(x[:, None, :].astype(jnp.float32)
+                        - centers[None, :, :].astype(jnp.float32)), axis=-1)
+    return jnp.argmin(d, axis=-1).astype(jnp.int32)

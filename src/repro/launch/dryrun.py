@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first: jax locks the device count on first
+init, and the dry-run needs 512 placeholder host devices to build the
+production meshes.  Smoke tests / benches never import this module.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+      --shape train_4k --mesh single [--mode crossbar] [--out experiments/dryrun]
+
+Emits a JSON record per cell: memory analysis (proves fit), cost analysis
+(FLOPs/bytes), collective bytes, and the roofline terms (launch/roofline.py).
+"""
+import argparse
+import json
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.dist import sharding as shd
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step, _mirror_shardings
+
+HBM_PER_CHIP = 16 * 1024 ** 3   # v5e: 16 GiB
+
+
+# ---------------------------------------------------------------------------
+# Cache/batch sharding heuristics (decode graphs)
+# ---------------------------------------------------------------------------
+
+def _as_tuple(axes):
+    if axes is None:
+        return ()
+    return axes if isinstance(axes, tuple) else (axes,)
+
+
+def _cache_pspec(path, leaf, mesh, rules, batch: int) -> P:
+    name = str(getattr(path[-1], "key", getattr(path[-1], "idx", "")))
+    if name in ("length", "pos") or leaf.ndim == 0:
+        return P()
+    if name.endswith("_scale"):
+        # int8 KV scales (B, S, K) [+leading layer axis]: shard S with the
+        # codes' S axis so dequantization stays local
+        entries = [None] * leaf.ndim
+        batch_axes = _as_tuple(rules.get("batch"))
+        model_ax = rules.get("model")
+        for i in range(min(2, leaf.ndim)):
+            if leaf.shape[i] == batch and batch_axes:
+                size = np.prod([mesh.shape[a] for a in batch_axes])
+                if batch % int(size) == 0:
+                    entries[i] = (batch_axes if len(batch_axes) > 1
+                                  else batch_axes[0])
+                    break
+        used = {a for e in entries if e is not None
+                for a in (e if isinstance(e, tuple) else (e,))}
+        if model_ax and model_ax not in used and leaf.ndim >= 3 and \
+                leaf.shape[-2] % mesh.shape[model_ax] == 0:
+            entries[-2] = model_ax
+        return P(*entries)
+    entries: list[Any] = [None] * leaf.ndim
+    batch_axes = _as_tuple(rules.get("batch"))
+    # batch dim: first axis (index 0 or 1 for layer-stacked caches) == batch
+    for i in range(min(2, leaf.ndim)):
+        if leaf.shape[i] == batch and batch_axes:
+            size = np.prod([mesh.shape[a] for a in batch_axes])
+            if batch % int(size) == 0:
+                entries[i] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+                break
+    # model-axis shard, in preference order:
+    #   1. sequence axis of KV caches (ndim>=4, dim -3) — flash-decoding
+    #      style split-KV: softmax reductions over the sharded S are cheap
+    #      scalars, and it avoids SPMD repartition of the cache,
+    #   2. kv-heads axis (dim -2),
+    #   3. last dim (head_dim / channels).
+    model_ax = rules.get("model")
+    used = {a for e in entries if e is not None
+            for a in (e if isinstance(e, tuple) else (e,))}
+    if model_ax and model_ax not in used:
+        msize = mesh.shape[model_ax]
+        if (leaf.ndim >= 4 and entries[-3] is None
+                and leaf.shape[-3] % msize == 0 and leaf.shape[-3] > 1):
+            entries[-3] = model_ax
+        elif (leaf.ndim >= 4 and entries[-2] is None
+                and leaf.shape[-2] % msize == 0 and leaf.shape[-2] > 1):
+            entries[-2] = model_ax
+        elif (leaf.ndim >= 2 and entries[-1] is None
+                and leaf.shape[-1] % msize == 0 and leaf.shape[-1] > 1):
+            entries[-1] = model_ax
+    return P(*entries)
+
+
+def cache_shardings(cache_abs, mesh, rules, batch: int):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abs)
+    out = [NamedSharding(mesh, _cache_pspec(p, l, mesh, rules, batch))
+           for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_abs, mesh, rules):
+    batch_axes = _as_tuple(rules.get("batch"))
+    spec = P(batch_axes if len(batch_axes) > 1
+             else (batch_axes[0] if batch_axes else None))
+
+    def per_leaf(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        size = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        if size and leaf.shape[0] % size == 0:
+            return NamedSharding(mesh, spec)
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(per_leaf, batch_abs)
+
+
+# ---------------------------------------------------------------------------
+# Cell lowering
+# ---------------------------------------------------------------------------
+
+def _lower_one(cfg, kind, seq_len, global_batch, mesh, rules):
+    """Lower + compile one graph; returns (compiled, t_lower, t_compile)."""
+    model = build_model(cfg)
+    abs_params = model.abstract_params()
+    param_sh = shd.named_shardings(model.spec, rules, mesh)
+    t0 = time.time()
+    with mesh, shd.activation_sharding(mesh, rules):
+        if kind == "train":
+            opt = adamw(3e-4)
+            abs_opt = jax.eval_shape(opt.init, abs_params)
+            opt_sh = _mirror_shardings(abs_opt, abs_params, param_sh)
+            batch_abs = model.input_specs("train", seq_len, global_batch)
+            batch_sh = batch_shardings(batch_abs, mesh, rules)
+            step = make_train_step(model, opt, param_shardings=param_sh,
+                                   grad_accum=cfg.grad_accum)
+            fn = jax.jit(step,
+                         in_shardings=(param_sh, opt_sh, batch_sh, None),
+                         out_shardings=(param_sh, opt_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(abs_params, abs_opt, batch_abs,
+                               jax.ShapeDtypeStruct((), jnp.int32))
+        elif kind == "prefill":
+            batch_abs = model.input_specs("prefill", seq_len, global_batch)
+            batch_sh = batch_shardings(batch_abs, mesh, rules)
+            fn = jax.jit(model.prefill_fn,
+                         in_shardings=(param_sh, batch_sh))
+            lowered = fn.lower(abs_params, batch_abs)
+        else:  # decode
+            batch_abs, cache_abs = model.input_specs("decode", seq_len,
+                                                     global_batch)
+            batch_sh = batch_shardings(batch_abs, mesh, rules)
+            cache_sh = cache_shardings(cache_abs, mesh, rules, global_batch)
+            fn = jax.jit(model.decode_fn,
+                         in_shardings=(param_sh, cache_sh, batch_sh),
+                         out_shardings=(None, cache_sh),
+                         donate_argnums=(1,))
+            lowered = fn.lower(abs_params, cache_abs, batch_abs)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def _probe_config(cfg, p: int):
+    """Config with ``p`` scan periods (same prefix/suffix/embed): used to
+    extrapolate per-period FLOPs/bytes/collectives, because XLA cost
+    analysis counts a while-loop body ONCE regardless of trip count
+    (calibrated in EXPERIMENTS.md §Dry-run)."""
+    from repro.models.lm import stack_layout
+    # grad_accum=1 in probes: the accumulation loop is itself a scan whose
+    # body XLA counts once; a single full-batch step has identical total
+    # FLOPs/bytes to the accumulated step (modulo accumulator adds).
+    if cfg.family == "encdec":
+        return cfg.replace(encoder_layers=p, n_layers=p, unroll_layers=True,
+                           grad_accum=1)
+    lay = stack_layout(cfg)
+    n = cfg.first_dense_layers + len(lay.pattern) * p + len(lay.suffix)
+    return cfg.replace(n_layers=n, unroll_layers=True, grad_accum=1)
+
+
+def _scan_corrected_metrics(cfg, kind, seq_len, global_batch, mesh, rules):
+    """(flops, bytes, coll_bytes, coll_breakdown) per device, linearly
+    extrapolated over scan periods from p=1 and p=2 probe compiles."""
+    from repro.models.lm import stack_layout
+    periods = (cfg.n_layers if cfg.family == "encdec"
+               else stack_layout(cfg).periods)
+    c1, *_ = _lower_one(_probe_config(cfg, 1), kind, seq_len, global_batch,
+                        mesh, rules)
+    c2, *_ = _lower_one(_probe_config(cfg, 2), kind, seq_len, global_batch,
+                        mesh, rules)
+
+    def metrics(c):
+        ca = c.cost_analysis()
+        coll = rl.collective_bytes(c.as_text(), mesh.size)
+        return (float(ca.get("flops", 0.0)),
+                float(ca.get("bytes accessed", 0.0)), coll)
+
+    f1, b1, co1 = metrics(c1)
+    f2, b2, co2 = metrics(c2)
+    k = periods - 1
+    flops = f1 + (f2 - f1) * k
+    bytes_ = b1 + (b2 - b1) * k
+    keys = set(co1) | set(co2)
+    coll = {key: co1.get(key, 0.0) + (co2.get(key, 0.0) - co1.get(key, 0.0)) * k
+            for key in keys}
+    coll["total"] = sum(v for kk, v in coll.items() if kk != "total")
+    return flops, bytes_, coll
+
+
+def lower_cell(arch: str, shape: str, mesh_kind: str, *, mode: str = "standard",
+               overrides: dict | None = None,
+               rules_overrides: dict | None = None):
+    """Build + lower + compile one cell.  Returns (record, compiled)."""
+    shape_info = SHAPES[shape]
+    kind = shape_info["kind"]
+    seq_len, global_batch = shape_info["seq_len"], shape_info["global_batch"]
+
+    cfg = get_config(arch, **(overrides or {}))
+    if mode == "crossbar":
+        cfg = cfg.replace(crossbar=True)
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "mode": mode, "skipped": reason}, None
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.size
+    all_rules = dict(cfg.sharding_overrides or ())
+    all_rules.update(rules_overrides or {})
+    rules = shd.make_rules(mesh, all_rules)
+
+    compiled, t_lower, t_compile = _lower_one(cfg, kind, seq_len,
+                                              global_batch, mesh, rules)
+    mem = compiled.memory_analysis()
+    model_flops = rl.model_flops_estimate(cfg, kind, seq_len, global_batch)
+    flops, bytes_, coll = _scan_corrected_metrics(cfg, kind, seq_len,
+                                                  global_batch, mesh, rules)
+    # attention/SSD chunk-loop correction (global -> per-device)
+    inner = rl.inner_loop_flops(cfg, kind, seq_len, global_batch) / n_dev
+    roof = rl.Roofline(flops_per_dev=flops + inner, bytes_per_dev=bytes_,
+                       coll_bytes_per_dev=coll["total"],
+                       coll_breakdown=coll, n_devices=n_dev,
+                       model_flops=model_flops)
+    per_dev_bytes = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+    record = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "mode": mode,
+        "kind": kind, "seq_len": seq_len, "global_batch": global_batch,
+        "n_devices": n_dev,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "memory": {
+            "argument": mem.argument_size_in_bytes,
+            "output": mem.output_size_in_bytes,
+            "temp": mem.temp_size_in_bytes,
+            "alias": mem.alias_size_in_bytes,
+            "per_device_bytes": per_dev_bytes,
+            "hbm_frac": per_dev_bytes / HBM_PER_CHIP,
+            "fits": per_dev_bytes <= HBM_PER_CHIP,
+        },
+        "roofline": roof.to_dict(),
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+        "overrides": overrides or {},
+    }
+    return record, compiled
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--mode", default="standard",
+                    choices=["standard", "crossbar"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int/float/bool/str)")
+    ap.add_argument("--rules", action="append", default=[],
+                    help="sharding rule override logical=axis1,axis2 "
+                         "(empty value = replicate)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "false"):
+            v = v == "true"
+        overrides[k] = v
+    rules_overrides = {}
+    for rv in args.rules:
+        k, v = rv.split("=", 1)
+        if not v:
+            rules_overrides[k] = None
+        else:
+            axes = tuple(v.split(","))
+            rules_overrides[k] = axes if len(axes) > 1 else axes[0]
+
+    record, compiled = lower_cell(args.arch, args.shape, args.mesh,
+                                  mode=args.mode, overrides=overrides,
+                                  rules_overrides=rules_overrides)
+    if "skipped" not in record and (args.rules or args.tag):
+        record["rules_overrides"] = {k: list(v) if isinstance(v, tuple) else v
+                                     for k, v in rules_overrides.items()}
+    os.makedirs(args.out, exist_ok=True)
+    tag = f"__{args.tag}" if args.tag else ""
+    name = f"{args.arch}__{args.shape}__{args.mesh}__{args.mode}{tag}.json"
+    with open(os.path.join(args.out, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+    if "skipped" in record:
+        print(f"SKIP {name}: {record['skipped']}")
+        return
+    r = record["roofline"]
+    m = record["memory"]
+    print(f"OK {name}")
+    print(f"  per-device HBM: {m['per_device_bytes']/2**30:.2f} GiB "
+          f"({m['hbm_frac']*100:.1f}% of 16GiB) fits={m['fits']}")
+    print(f"  t_compute={r['t_compute']*1e3:.3f}ms t_memory={r['t_memory']*1e3:.3f}ms "
+          f"t_collective={r['t_collective']*1e3:.3f}ms -> {r['bottleneck']}")
+    print(f"  useful_flops_ratio={r['useful_flops_ratio']:.3f} "
+          f"mfu_bound={r['mfu_bound']:.3f}")
+    print(f"  lower={record['timings']['lower_s']:.1f}s "
+          f"compile={record['timings']['compile_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

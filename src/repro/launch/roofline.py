@@ -1,0 +1,247 @@
+"""Roofline analysis from a compiled dry-run artifact (TPU v5e targets).
+
+Terms (seconds), computed from the SPMD-partitioned *per-device* module
+(calibrated in EXPERIMENTS.md §Dry-run: cost_analysis on a sharded matmul
+reports per-device FLOPs):
+
+  compute    = flops_per_device / PEAK_FLOPS
+  memory     = bytes_per_device / HBM_BW
+  collective = algo-weighted collective bytes per device / ICI_BW
+
+Collective bytes parse from ``compiled.as_text()``; each op's wire cost per
+device uses ring-algorithm weights on the *result* shape:
+
+  all-gather       result x (S-1)/S
+  reduce-scatter   result x (S-1)        (input = S x result)
+  all-reduce       result x 2(S-1)/S
+  all-to-all       result x (S-1)/S
+  collective-permute  result x 1
+
+with S the replica-group size parsed from ``replica_groups``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+# TPU v5e hardware constants (per task sheet).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9\[\],{}\s]+?)\s*"
+    r"(all-reduce-start|all-gather-start|all-reduce|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_NEW_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_OLD_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_NEW_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_OLD_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict[str, float]:
+    """Per-device wire bytes by collective kind (ring-algorithm weighted)."""
+    out: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        size = _shape_bytes(shape_str)
+        S = max(_group_size(line, n_devices), 1)
+        if S == 1:
+            continue
+        if op == "all-gather":
+            w = size * (S - 1) / S
+        elif op == "reduce-scatter":
+            w = size * (S - 1)
+        elif op == "all-reduce":
+            w = size * 2 * (S - 1) / S
+        elif op == "all-to-all":
+            w = size * (S - 1) / S
+        else:  # collective-permute
+            w = size
+        out[op] = out.get(op, 0.0) + w
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: dict[str, float]
+    n_devices: int
+    model_flops: float = 0.0    # 6*N*D (train) / 2*N*B (decode), global
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO FLOPs x chips): remat/dispatch/causal waste."""
+        total = self.flops_per_dev * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound."""
+        denom = self.t_bound * self.n_devices * PEAK_FLOPS
+        return self.model_flops / denom if denom else 0.0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "coll_breakdown": self.coll_breakdown,
+            "n_devices": self.n_devices,
+            "model_flops": self.model_flops,
+            "t_compute": self.t_compute,
+            "t_memory": self.t_memory,
+            "t_collective": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "t_bound": self.t_bound,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def analyze(compiled, n_devices: int, model_flops: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text(), n_devices)
+    return Roofline(
+        flops_per_dev=float(ca.get("flops", 0.0)),
+        bytes_per_dev=float(ca.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=coll["total"],
+        coll_breakdown=coll,
+        n_devices=n_devices,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_estimate(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    """6*N_active*tokens (train), 2*N_active*tokens (prefill/decode step)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    return 2.0 * n_active * global_batch        # decode: one token per slot
+
+
+def inner_loop_flops(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    """Analytic FLOPs for chunk-loop bodies (attention blocks, SSD chunks).
+
+    XLA cost analysis counts a lax.scan body ONCE; the layer scan is
+    corrected by probe extrapolation (dryrun._scan_corrected_metrics), but
+    loops *inside* a layer — the flash-attention (q-chunk, kv-chunk) grid
+    and the SSD chunk scan — need this static correction: block counts and
+    per-block dot shapes are compile-time constants, so the term is exact
+    for the matmul FLOPs (softmax/elementwise flops are neglected).
+    Decode graphs have no inner chunk loops (single-block attention).
+    """
+    import math as _m
+    if kind == "decode":
+        return 0.0
+    B, S = global_batch, seq_len
+    # fwd multiplicity: train = fwd + 2x bwd + remat fwd; prefill = fwd
+    mult = 1.0 if kind == "prefill" else (4.0 if cfg.remat != "none" else 3.0)
+    H = cfg.n_heads
+    hd = cfg.head_dim or (cfg.d_model // max(H, 1))
+
+    def attn_flops(Sq, Skv, causal, window):
+        """Correction ONLY for paths that lax.scan over blocks: the dense
+        grid (map+scan) and the paired causal schedule.  The triangular
+        (nq<=12) and banded window paths are python-unrolled, so their
+        blocks are already fully present in the probe HLO."""
+        cq, ck = min(cfg.q_chunk, Sq), min(cfg.kv_chunk, Skv)
+        nq, nk = Sq // cq, Skv // ck
+        if nq * nk <= 1:
+            return 0.0      # single block: already in the HLO count
+        if causal and cfg.skip_masked_blocks and Sq == Skv and cq == ck:
+            if window is None and nq % 2 == 0 and nq > 12:
+                blocks = (nq // 2) * (nq + 1)       # paired (scanned)
+            else:
+                return 0.0           # triangular/banded: python-unrolled
+        else:
+            blocks = nq * nk          # dense grid (scanned, incl. windowed)
+        return blocks * 4.0 * B * cq * ck * H * hd   # QK^T + PV matmuls
+
+    def ssd_flops():
+        s = cfg.ssd()
+        c = min(s.chunk, S)
+        nc = S // c
+        Hs, P, G, N = s.n_heads, s.head_dim, s.n_groups, s.d_state
+        per_chunk = (2.0 * B * c * c * G * N      # C.B
+                     + 2.0 * B * Hs * c * c * P   # att @ x
+                     + 4.0 * B * c * Hs * N * P)  # state build + y_inter
+        return nc * per_chunk
+
+    total = 0.0
+    if cfg.family == "encdec":
+        total += cfg.encoder_layers * attn_flops(S, S, False, None)
+        total += cfg.n_layers * (attn_flops(S, S, True, None)      # self
+                                 + attn_flops(S, S, False, None))  # cross
+        return total * mult
+    for k in cfg.layer_kinds():
+        if k in ("attn", "moe"):
+            total += attn_flops(S, S, True, None)
+        elif k == "local":
+            total += attn_flops(S, S, True, cfg.window)
+        elif k == "ssd":
+            total += ssd_flops()
+        # "rec": associative_scan unrolls into HLO (counted already)
+    return total * mult

@@ -1,0 +1,1 @@
+"""Neural-net layer substrate shared by all assigned architectures."""

@@ -1,0 +1,408 @@
+"""Attention: chunked (flash-style) training/prefill, cached decode.
+
+Never materializes the full (Sq, Skv) score matrix: the kv axis is processed
+in chunks with online-softmax accumulators, so 32k-token prefill fits.
+Supports GQA (n_kv_heads < n_heads), causal and bidirectional modes, sliding
+windows (RecurrentGemma local attention), and cross-attention (seamless
+decoder).  Decode attends a single query over a cache buffer; windowed
+layers use a rolling cache of window size, so 500k-context decode stays
+O(window).
+
+Causal/banded block skipping (``skip_masked_blocks=True``) drops
+fully-masked (q-chunk, kv-chunk) pairs from the schedule at trace time —
+for causal attention this halves attention FLOPs (EXPERIMENTS.md §Perf);
+the baseline (False) computes the dense block grid as a naive port would.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_activation
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+from repro.layers.rope import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    causal: bool = True
+    window: int | None = None           # sliding-window size (None = full)
+    rope_theta: float = 10000.0
+    mrope_sections: tuple[int, int, int] | None = None
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    skip_masked_blocks: bool = False    # perf: drop fully-masked blocks
+    softmax_scale: float | None = None
+
+    @property
+    def scale(self) -> float:
+        return self.softmax_scale or 1.0 / math.sqrt(self.head_dim)
+
+
+def attention_spec(cfg: AttnConfig, xbar: XbarMode | None = None) -> dict:
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": dense_spec(d, H * hd, ("fsdp", "heads"), bias=cfg.qkv_bias, xbar=xbar),
+        "wk": dense_spec(d, K * hd, ("fsdp", "heads"), bias=cfg.qkv_bias, xbar=xbar),
+        "wv": dense_spec(d, K * hd, ("fsdp", "heads"), bias=cfg.qkv_bias, xbar=xbar),
+        "wo": dense_spec(H * hd, d, ("heads", "fsdp"), xbar=xbar),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _rope(cfg: AttnConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    if cfg.mrope_sections is not None:
+        return apply_mrope(x, positions, cfg.mrope_sections, theta=cfg.rope_theta)
+    return apply_rope(x, positions, theta=cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _block_mask(qi0, ki0, q_chunk, kv_chunk, causal, window):
+    qi = qi0 + jnp.arange(q_chunk)[:, None]
+    ki = ki0 + jnp.arange(kv_chunk)[None, :]
+    m = jnp.ones((q_chunk, kv_chunk), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def _online_update(carry, qb, kb, vb, qi0, ki0, *, scale, causal, window):
+    """One (q-chunk, kv-chunk) online-softmax step.
+
+    qb: (B, cq, K, G, hd); kb/vb: (B, ck, K, hd).
+    carry = (m, l, o) with shapes (B,K,G,cq), (B,K,G,cq), (B,K,G,cq,hd).
+    """
+    m, l, o = carry
+    cq, ck = qb.shape[1], kb.shape[1]
+    # bf16 operands with fp32 accumulation (preferred_element_type) — no
+    # materialized fp32 copies of q/k/v blocks
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb,
+                   preferred_element_type=jnp.float32) * scale
+    mask = _block_mask(qi0, ki0, cq, ck, causal, window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + p.sum(axis=-1)
+    o = o * corr[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+        preferred_element_type=jnp.float32)
+    return (m_new, l, o)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      scale: float, causal: bool, window: int | None,
+                      q_chunk: int, kv_chunk: int,
+                      skip_masked_blocks: bool = False) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, K, hd); H % K == 0.
+
+    Returns (B, Sq, H, hd).  Assumes q token i is at absolute position i
+    (true for train/prefill).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, K, _ = k.shape
+    G = H // K
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, K, G, hd)
+    kc = jnp.moveaxis(k.reshape(B, nk, kv_chunk, K, hd), 1, 0)   # (nk,B,ck,K,hd)
+    vc = jnp.moveaxis(v.reshape(B, nk, kv_chunk, K, hd), 1, 0)
+
+    def fresh():
+        return (jnp.full((B, K, G, q_chunk), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, q_chunk), jnp.float32),
+                jnp.zeros((B, K, G, q_chunk, hd), jnp.float32))
+
+    def finalize(m, l, o):
+        return o / jnp.maximum(l, 1e-30)[..., None]   # (B,K,G,cq,hd)
+
+    # Block bodies are rematerialized (jax.checkpoint): the backward pass
+    # recomputes each block's scores instead of saving O(S^2) residuals —
+    # the flash-attention memory property.
+    block_update = jax.checkpoint(
+        partial(_online_update, scale=scale, causal=causal, window=window))
+
+    if (skip_masked_blocks and causal and window is None and Sq == Skv
+            and q_chunk == kv_chunk and nq % 2 == 0 and nq > 12):
+        # Paired schedule (flash "causal pairing"): q rows (i, nq-1-i) need
+        # (i+1) + (nq-i) = nq+1 blocks together — constant per pair, so a
+        # lax.scan over nq+1 ticks computes exactly one block per tick and
+        # total attention FLOPs halve vs the dense grid, without unrolling.
+        out = _paired_causal(qc, kc, vc, scale=scale, q_chunk=q_chunk,
+                             kv_chunk=kv_chunk)
+    elif skip_masked_blocks and causal and Sq == Skv and q_chunk == kv_chunk:
+        # Static triangular / banded schedule: q chunk i sees kv chunks
+        # [max(0, i - w_chunks), i]; for full causal w_chunks = i.
+        w_chunks = nq if window is None else math.ceil(window / kv_chunk)
+        outs = []
+        for i in range(nq):
+            carry = fresh()
+            for j in range(max(0, i - w_chunks), i + 1):
+                carry = block_update(carry, qc[:, i], kc[j], vc[j],
+                                     i * q_chunk, j * kv_chunk)
+            outs.append(finalize(*carry))
+        out = jnp.stack(outs, axis=1)                   # (B,nq,K,G,cq,hd)
+    else:
+        @jax.checkpoint
+        def one_q_chunk(args):
+            qb, qi0 = args
+
+            def kv_step(carry, inp):
+                kb, vb, ki0 = inp
+                return block_update(carry, qb, kb, vb, qi0, ki0), None
+
+            carry, _ = jax.lax.scan(
+                kv_step, fresh(), (kc, vc, jnp.arange(nk) * kv_chunk))
+            return finalize(*carry)
+
+        out = jax.lax.map(one_q_chunk,
+                          (jnp.moveaxis(qc, 1, 0), jnp.arange(nq) * q_chunk))
+        out = jnp.moveaxis(out, 0, 1)                   # (B,nq,K,G,cq,hd)
+
+    out = jnp.moveaxis(out, 4, 2)                       # (B,nq,cq,K,G,hd)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _paired_causal(qc, kc, vc, *, scale, q_chunk, kv_chunk):
+    """Causal attention with the paired row schedule.
+
+    qc: (B, nq, cq, K, G, hd); kc/vc: (nk, B, ck, K, hd), nq == nk even.
+    Pair p handles q rows i=p and j=nq-1-p; tick t in [0, nq] computes
+    row i's kv block t while t <= i, else row j's kv block t-i-1.
+    """
+    B, nq, cq, K, G, hd = qc.shape
+
+    def one_pair(args):
+        qi, qj, i = args                     # (B,cq,K,G,hd) x2, scalar
+        j = nq - 1 - i
+
+        def fresh():
+            return (jnp.full((B, K, G, cq), NEG_INF, jnp.float32),
+                    jnp.zeros((B, K, G, cq), jnp.float32),
+                    jnp.zeros((B, K, G, cq, hd), jnp.float32))
+
+        @jax.checkpoint
+        def tick(carry, t):
+            acc_i, acc_j = carry
+            use_i = t <= i
+            kv_idx = jnp.where(use_i, t, t - i - 1)
+            kb = jax.lax.dynamic_index_in_dim(kc, kv_idx, 0, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, kv_idx, 0, keepdims=False)
+            qb = jnp.where(use_i, qi, qj)
+            qpos = jnp.where(use_i, i, j) * q_chunk
+            cur = jax.tree.map(lambda a, b: jnp.where(use_i, a, b),
+                               acc_i, acc_j)
+            new = _online_update(cur, qb, kb, vb, qpos, kv_idx * kv_chunk,
+                                 scale=scale, causal=True, window=None)
+            acc_i = jax.tree.map(lambda n, o: jnp.where(use_i, n, o),
+                                 new, acc_i)
+            acc_j = jax.tree.map(lambda n, o: jnp.where(use_i, o, n),
+                                 new, acc_j)
+            return (acc_i, acc_j), None
+
+        (acc_i, acc_j), _ = jax.lax.scan(tick, (fresh(), fresh()),
+                                         jnp.arange(nq + 1))
+        fin = lambda m, l, o: o / jnp.maximum(l, 1e-30)[..., None]
+        return fin(*acc_i), fin(*acc_j)
+
+    half = nq // 2
+    idx = jnp.arange(half)
+    qi_all = jnp.moveaxis(qc[:, :half], 1, 0)           # (half,B,cq,K,G,hd)
+    qj_all = jnp.moveaxis(qc[:, ::-1][:, :half], 1, 0)  # rows nq-1-p
+    out_i, out_j = jax.lax.map(one_pair, (qi_all, qj_all, idx))
+    # out_i[p] = row p; out_j[p] = row nq-1-p
+    out = jnp.concatenate([out_i, out_j[::-1]], axis=0)  # (nq,B,K,G,cq,hd)
+    return jnp.moveaxis(out, 0, 1)                       # (B,nq,K,G,cq,hd)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention over a cache
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     valid: jax.Array, *, scale: float) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S, K, hd); valid: (B, S) bool mask."""
+    B, _, H, hd = q.shape
+    K = k_cache.shape[2]
+    G = H // K
+    qh = q.reshape(B, K, G, hd).astype(k_cache.dtype)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cache structures
+# ---------------------------------------------------------------------------
+
+def init_self_cache(cfg: AttnConfig, batch: int, max_len: int,
+                    dtype=jnp.bfloat16) -> dict:
+    """Full-attention layers allocate max_len slots; windowed layers keep a
+    rolling buffer of window slots with an absolute-position tag per slot
+    (so 500k-context decode is O(window) memory).
+
+    ``dtype=jnp.int8`` selects the quantized KV cache: sign-magnitude int8
+    codes with one bf16 scale per (batch, slot, kv-head) — the paper's
+    quantized-transport discipline (C3/C4) applied to decode memory, 1.9x
+    less HBM than bf16 (EXPERIMENTS.md §Perf).
+    """
+    size = min(max_len, cfg.window) if cfg.window is not None else max_len
+    cache = {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),   # absolute position per slot
+        "length": jnp.zeros((), jnp.int32),        # tokens seen so far
+    }
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, size, cfg.n_kv_heads),
+                                     jnp.bfloat16)
+        cache["v_scale"] = jnp.zeros((batch, size, cfg.n_kv_heads),
+                                     jnp.bfloat16)
+    return cache
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(B, 1, K, hd) -> int8 codes + per-(B,1,K) bf16 scale."""
+    scale = jnp.max(jnp.abs(x), axis=-1) / 127.0
+    safe = jnp.where(scale == 0, 1.0, scale)
+    codes = jnp.clip(jnp.round(x / safe[..., None]), -127, 127)
+    return codes.astype(jnp.int8), scale.astype(jnp.bfloat16)
+
+
+def _dequantize_kv(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.bfloat16) * scale[..., None].astype(jnp.bfloat16)
+
+
+def _cache_append(cache: dict, k: jax.Array, v: jax.Array) -> dict:
+    """Append one token's k/v (B, 1, K, hd) at slot length % size."""
+    size = cache["k"].shape[1]
+    length = cache["length"]
+    slot = length % size
+    new = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new["k"] = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        new["v"] = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        new["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0))
+        new["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0))
+    else:
+        new["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+        new["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new["pos"] = jax.lax.dynamic_update_slice(cache["pos"], length[None],
+                                              (slot,))
+    new["length"] = length + 1
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Full layer (projections + rope + cache management)
+# ---------------------------------------------------------------------------
+
+def attention_apply(params: dict, x: jax.Array, cfg: AttnConfig, *,
+                    positions: jax.Array, cache: dict | None = None,
+                    kv_source: jax.Array | None = None,
+                    xbar: XbarMode | None = None,
+                    compute_dtype: Any = jnp.bfloat16
+                    ) -> tuple[jax.Array, dict | None]:
+    """Self- or cross-attention.
+
+    Train/prefill: ``cache is None`` and ``x`` has full sequence length.
+    Decode: ``x`` is (B, 1, d) and ``cache`` holds k/v buffers plus length.
+    Cross-attention passes ``kv_source`` (encoder output) on the first call
+    (cache gets filled) or a cache with precomputed k/v on decode calls.
+    """
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    B = x.shape[0]
+    cross = kv_source is not None or (cache is not None and "pos" not in cache
+                                      and "k" in cache)
+
+    q = _split_heads(dense_apply(params["wq"], x, compute_dtype=compute_dtype,
+                                 xbar=xbar), H, hd)
+    new_cache = cache
+
+    if cross:
+        if cache is None or "k" not in cache:
+            k = _split_heads(dense_apply(params["wk"], kv_source,
+                                         compute_dtype=compute_dtype,
+                                         xbar=xbar), K, hd)
+            v = _split_heads(dense_apply(params["wv"], kv_source,
+                                         compute_dtype=compute_dtype,
+                                         xbar=xbar), K, hd)
+            if cache is not None:
+                new_cache = {"k": k, "v": v}
+        else:
+            k, v = cache["k"], cache["v"]
+        if q.shape[1] == 1:
+            valid = jnp.ones((B, k.shape[1]), bool)
+            y = decode_attention(q, k, v, valid, scale=cfg.scale)
+        else:
+            y = chunked_attention(q, k, v, scale=cfg.scale, causal=False,
+                                  window=None, q_chunk=cfg.q_chunk,
+                                  kv_chunk=cfg.kv_chunk)
+    else:
+        k = _split_heads(dense_apply(params["wk"], x, compute_dtype=compute_dtype,
+                                     xbar=xbar), K, hd)
+        v = _split_heads(dense_apply(params["wv"], x, compute_dtype=compute_dtype,
+                                     xbar=xbar), K, hd)
+        q = _rope(cfg, q, positions)
+        k = _rope(cfg, k, positions)
+        q = shard_activation(q, "batch", "seq", "heads", None)
+
+        if cache is not None:
+            # decode: append one token, attend over valid slots
+            new_cache = _cache_append(cache, k, v)
+            kc, vc = new_cache["k"], new_cache["v"]
+            if "k_scale" in new_cache:
+                kc = _dequantize_kv(kc, new_cache["k_scale"])
+                vc = _dequantize_kv(vc, new_cache["v_scale"])
+            pos = new_cache["pos"]
+            cur = cache["length"]  # position of the new token
+            valid = (pos >= 0) & (pos <= cur)
+            if cfg.window is not None:
+                valid &= pos > cur - cfg.window
+            y = decode_attention(q, kc, vc,
+                                 jnp.broadcast_to(valid[None, :],
+                                                  (B, kc.shape[1])),
+                                 scale=cfg.scale)
+        else:
+            y = chunked_attention(q, k, v, scale=cfg.scale, causal=cfg.causal,
+                                  window=cfg.window, q_chunk=cfg.q_chunk,
+                                  kv_chunk=cfg.kv_chunk,
+                                  skip_masked_blocks=cfg.skip_masked_blocks)
+
+    y = shard_activation(y, "batch", "seq", "heads", None)
+    y = y.reshape(B, y.shape[1], H * hd)
+    out = dense_apply(params["wo"], y, compute_dtype=compute_dtype, xbar=xbar)
+    return out, new_cache

@@ -1,0 +1,48 @@
+"""Token embedding + LM head, vocab-sharded."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, normal_init, shard_activation
+from repro.layers.linear import XbarMode, dense_spec
+
+
+def embedding_spec(vocab: int, d_model: int) -> dict:
+    return {"table": ParamSpec((vocab, d_model), ("vocab", "fsdp"),
+                               normal_init(0.02))}
+
+
+def embed_apply(params: dict, tokens: jax.Array,
+                compute_dtype: Any = jnp.bfloat16) -> jax.Array:
+    y = params["table"].astype(compute_dtype)[tokens]
+    return shard_activation(y, "batch", "seq", None)
+
+
+def lm_head_spec(d_model: int, vocab: int, xbar: XbarMode | None = None) -> dict:
+    return dense_spec(d_model, vocab, ("fsdp", "vocab"), xbar=xbar)
+
+
+def lm_head_apply(params: dict, x: jax.Array, *, tied_table=None,
+                  compute_dtype: Any = jnp.bfloat16,
+                  valid_vocab: int | None = None) -> jax.Array:
+    if tied_table is not None:
+        logits = x.astype(compute_dtype) @ tied_table.astype(compute_dtype).T
+    else:
+        w = (params["w"] if "w" in params
+             else params["g_plus"] - params["g_minus"]).astype(compute_dtype)
+        logits = x.astype(compute_dtype) @ w
+    logits = logits.astype(jnp.float32)
+    if valid_vocab is not None and valid_vocab < logits.shape[-1]:
+        pad_mask = jnp.arange(logits.shape[-1]) >= valid_vocab
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return shard_activation(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy; logits f32 (B, S, V), labels (B, S)."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

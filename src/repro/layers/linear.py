@@ -1,0 +1,124 @@
+"""Projection layers, with optional crossbar-constrained execution.
+
+Every projection in every architecture goes through ``dense_spec`` /
+``dense_apply``.  In standard mode a projection is one weight tensor; in
+crossbar mode (``XbarMode``) it is a differential conductance pair with
+transport-quantized activations and error-quantized backward — the paper's
+technique as a first-class execution mode for the assigned LM architectures
+(DESIGN.md section 4).
+
+LM activations are not range-bounded like h(x), so crossbar-LM transport
+quantization uses dynamic max-abs fake-quant at ``act_bits`` (paper-faithful
+narrow transport; default 8-bit) instead of the fixed-range 3-bit ADC used by
+the paper-application path in core/crossbar.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from repro.dist.sharding import ParamSpec, fanin_init, zeros_init
+
+
+@dataclasses.dataclass(frozen=True)
+class XbarMode:
+    """Crossbar execution settings for LM projections.
+
+    ``paired=True`` stores the paper-literal differential pair (G+, G-):
+    two parameter tensors, two gradients — 2x FSDP gather/reduce-scatter
+    traffic (measured +28% roofline bound, EXPERIMENTS.md §Perf D).
+    ``paired=False`` is the beyond-paper reparametrization (w, common-mode):
+    G± = c ± w/2 with c a constant buffer — the common mode has ZERO
+    gradient (dL/dc = dL/dG+ + dL/dG- = dw - dw = 0), so only w trains and
+    collective traffic returns to 1x while conductance semantics
+    (w ∈ [-w_max, w_max] clipping) are preserved.
+    """
+    act_bits: int = 8          # transport quantization of activations (C3)
+    err_bits: int = 8          # transport quantization of errors (C4)
+    w_max: float = 4.0         # representable |w| (conductance range, C1)
+    paired: bool = True        # store literal (G+, G-) vs (w, common-mode)
+
+    @staticmethod
+    def from_config(cfg) -> "XbarMode | None":
+        if not getattr(cfg, "crossbar", False):
+            return None
+        return XbarMode(act_bits=getattr(cfg, "xbar_act_bits", 8),
+                        err_bits=getattr(cfg, "xbar_err_bits", 8),
+                        w_max=getattr(cfg, "xbar_w_max", 4.0),
+                        paired=getattr(cfg, "xbar_paired", True))
+
+
+def dense_spec(d_in: int, d_out: int, axes: tuple[str | None, str | None],
+               *, bias: bool = False, xbar: XbarMode | None = None,
+               init=None) -> dict[str, ParamSpec]:
+    init = init or fanin_init(0)
+    if xbar is None:
+        out = {"w": ParamSpec((d_in, d_out), axes, init)}
+    elif not xbar.paired:
+        # (w, common-mode) reparametrization: only w is a parameter; the
+        # conductance range constraint becomes weight clipping at init/use
+        def w_init(key, shape, dtype):
+            return jnp.clip(init(key, shape, dtype), -xbar.w_max, xbar.w_max)
+        out = {"w": ParamSpec((d_in, d_out), axes, w_init)}
+    else:
+        # Differential pair: two bounded non-negative tensors (paper C1).
+        def gp_init(key, shape, dtype):
+            w = init(key, shape, dtype)
+            w = jnp.clip(w, -xbar.w_max, xbar.w_max)
+            return 0.5 * xbar.w_max + 0.5 * w
+
+        def gm_init(key, shape, dtype):
+            w = init(key, shape, dtype)
+            w = jnp.clip(w, -xbar.w_max, xbar.w_max)
+            return 0.5 * xbar.w_max - 0.5 * w
+
+        out = {"g_plus": ParamSpec((d_in, d_out), axes, gp_init),
+               "g_minus": ParamSpec((d_in, d_out), axes, gm_init)}
+    if bias:
+        out["b"] = ParamSpec((d_out,), (axes[1],), zeros_init())
+    return out
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def qmatmul(x: jax.Array, w: jax.Array, err_bits: int) -> jax.Array:
+    """Matmul whose backward error signal is quantized before the transpose
+    product — the paper's 8-bit error discretization (C4) in autodiff form."""
+    return x @ w
+
+
+def _qmatmul_fwd(x, w, err_bits):
+    return x @ w, (x, w)
+
+
+def _qmatmul_bwd(err_bits, res, dy):
+    x, w = res
+    dyq = q.error_quantize(dy, err_bits).dequantize().astype(dy.dtype)
+    dx = dyq @ w.T
+    dw = jnp.einsum("...i,...j->ij", x, dyq).astype(w.dtype)
+    return dx, dw
+
+
+qmatmul.defvjp(_qmatmul_fwd, _qmatmul_bwd)
+
+
+def dense_apply(params: dict[str, jax.Array], x: jax.Array, *,
+                compute_dtype: Any = jnp.bfloat16,
+                xbar: XbarMode | None = None) -> jax.Array:
+    if xbar is None:
+        w = params["w"].astype(compute_dtype)
+        y = x.astype(compute_dtype) @ w
+    else:
+        if "w" in params:   # (w, common-mode) reparametrization
+            w = params["w"].astype(compute_dtype)
+        else:               # literal differential pair
+            w = (params["g_plus"] - params["g_minus"]).astype(compute_dtype)
+        xq = q.fake_quant(x.astype(compute_dtype), xbar.act_bits)
+        y = qmatmul(xq, w, xbar.err_bits)
+    if "b" in params:
+        y = y + params["b"].astype(compute_dtype)
+    return y

@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU MLPs."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_activation
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def mlp_spec(d_model: int, d_ff: int, *, gated: bool = True,
+             xbar: XbarMode | None = None) -> dict:
+    spec = {
+        "wi": dense_spec(d_model, d_ff, ("fsdp", "ff"), xbar=xbar),
+        "wo": dense_spec(d_ff, d_model, ("ff", "fsdp"), xbar=xbar),
+    }
+    if gated:
+        spec["wg"] = dense_spec(d_model, d_ff, ("fsdp", "ff"), xbar=xbar)
+    return spec
+
+
+def mlp_apply(params: dict, x: jax.Array, *, act: str = "silu",
+              xbar: XbarMode | None = None,
+              compute_dtype: Any = jnp.bfloat16) -> jax.Array:
+    h = dense_apply(params["wi"], x, compute_dtype=compute_dtype, xbar=xbar)
+    if "wg" in params:
+        g = dense_apply(params["wg"], x, compute_dtype=compute_dtype, xbar=xbar)
+        h = ACTS[act](g) * h
+    else:
+        h = ACTS[act](h)
+    h = shard_activation(h, "batch", "seq", "ff")
+    return dense_apply(params["wo"], h, compute_dtype=compute_dtype, xbar=xbar)

@@ -1,0 +1,123 @@
+"""Mixture-of-Experts FFN with capacity-based GShard-style dispatch.
+
+Tokens are bucketed into fixed-size groups; within a group each token picks
+top-k experts, takes a slot in the expert's capacity buffer (first come,
+first served via cumulative sum, top-1 choices prioritized), and overflow
+drops.  Dispatch/combine are one-hot einsums — the TPU-native dataflow whose
+collectives XLA schedules statically (the paper's static-routing discipline,
+DESIGN.md C7).  Experts shard over the ``model`` mesh axis (EP); tokens over
+``data``.
+
+Shapes (g = groups, s = group size, e = experts, c = capacity):
+  dispatch: (g, s, e, c) bool   combine: (g, s, e, c) f32
+  xe = einsum('gsec,gsd->gecd') -> expert FFN -> ye (g,e,c,d)
+  y  = einsum('gsec,gecd->gsd')
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, fanin_init, shard_activation
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+from repro.layers.mlp import mlp_apply, mlp_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeConfig:
+    d_model: int
+    n_experts: int
+    top_k: int
+    d_expert: int                   # per-expert FFN hidden size
+    n_shared_experts: int = 0       # shared-expert multiplier (DeepSeek-style)
+    capacity_factor: float = 1.25
+    group_size: int = 1024
+    norm_topk_prob: bool = True
+    act: str = "silu"
+    aux_loss_coef: float = 0.001
+
+
+def moe_spec(cfg: MoeConfig, xbar: XbarMode | None = None) -> dict:
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_expert
+    init = fanin_init(1)  # fan-in is the middle (d) axis for stacked experts
+    spec = {
+        "router": dense_spec(d, E, ("fsdp", None)),
+        "wg": ParamSpec((E, d, f), ("experts", "fsdp", None), init),
+        "wi": ParamSpec((E, d, f), ("experts", "fsdp", None), init),
+        "wo": ParamSpec((E, f, d), ("experts", None, "fsdp"), fanin_init(1)),
+    }
+    if cfg.n_shared_experts:
+        spec["shared"] = mlp_spec(d, cfg.n_shared_experts * f, gated=True,
+                                  xbar=xbar)
+    return spec
+
+
+def _capacity(cfg: MoeConfig, group: int) -> int:
+    c = int(cfg.capacity_factor * group * cfg.top_k / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)   # round up to a multiple of 4
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: MoeConfig, *,
+              xbar: XbarMode | None = None,
+              compute_dtype: Any = jnp.bfloat16
+              ) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    g_size = min(cfg.group_size, T)
+    assert T % g_size == 0, (T, g_size)
+    G = T // g_size
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, g_size)
+
+    xt = x.reshape(G, g_size, d)
+    xt = shard_activation(xt, "batch", None, None)
+
+    logits = dense_apply(params["router"], xt,
+                         compute_dtype=jnp.float32)          # (G,s,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (G,s,k)
+    if cfg.norm_topk_prob:
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # Load-balancing aux loss (Switch eq. 4): E * sum_e f_e * P_e.
+    me = probs.mean(axis=(0, 1))                              # (E,)
+    ce = jax.nn.one_hot(top_i, E).sum(axis=2).mean(axis=(0, 1)) / k
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # Slot assignment: iterate the k choices in priority order so top-1
+    # claims capacity first (GShard).  position_in_expert via cumsum.
+    onehot = jax.nn.one_hot(top_i, E, dtype=jnp.int32)        # (G,s,k,E)
+    prio = jnp.moveaxis(onehot, 2, 1).reshape(G, k * g_size, E)
+    pos = jnp.cumsum(prio, axis=1) - 1                        # (G,k*s,E)
+    keep = (pos < C) & (prio > 0)
+    pos = jnp.where(keep, pos, 0)
+    slot_oh = jax.nn.one_hot(pos, C, dtype=compute_dtype) * keep[..., None]
+    slot_oh = slot_oh.reshape(G, k, g_size, E, C)
+    dispatch = jnp.moveaxis(slot_oh, 1, 2)                    # (G,s,k,E,C)
+
+    gates = top_p.astype(compute_dtype)[..., None, None]      # (G,s,k,1,1)
+    combine = (dispatch * gates).sum(axis=2)                  # (G,s,E,C)
+    dispatch = dispatch.sum(axis=2)                           # (G,s,E,C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch,
+                    xt.astype(compute_dtype))                 # (G,E,C,d)
+    xe = shard_activation(xe, "batch", "experts", None, None)
+    wg = params["wg"].astype(compute_dtype)
+    wi = params["wi"].astype(compute_dtype)
+    wo = params["wo"].astype(compute_dtype)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, wg)) * \
+        jnp.einsum("gecd,edf->gecf", xe, wi)
+    ye = jnp.einsum("gecf,efd->gecd", h, wo)                  # (G,E,C,d)
+    ye = shard_activation(ye, "batch", "experts", None, None)
+
+    y = jnp.einsum("gsec,gecd->gsd", combine, ye)             # (G,s,d)
+    y = y.reshape(B, S, d)
+
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, act=cfg.act, xbar=xbar,
+                          compute_dtype=compute_dtype)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,36 @@
+"""RMSNorm / LayerNorm."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, ones_init, zeros_init
+
+
+def rmsnorm_spec(dim: int) -> dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), (None,), ones_init())}
+
+
+def rmsnorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layernorm_spec(dim: int) -> dict[str, ParamSpec]:
+    return {"scale": ParamSpec((dim,), (None,), ones_init()),
+            "bias": ParamSpec((dim,), (None,), zeros_init())}
+
+
+def layernorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(dtype)

@@ -1,0 +1,124 @@
+"""Griffin / RecurrentGemma recurrent block (RG-LRU, arXiv:2402.19427).
+
+Recurrence:  a_t = exp(-c * softplus(Lambda) * sigma(r_t))
+             h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` (log-depth), decode the
+O(1) step.  The block is the Griffin recurrent block: a conv+RG-LRU branch
+gated by a GeLU branch, both fed from the block input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, shard_activation, zeros_init
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+
+RGLRU_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int
+    d_conv: int = 4
+
+
+def rglru_spec(cfg: RGLRUConfig, xbar: XbarMode | None = None) -> dict:
+    d, r = cfg.d_model, cfg.d_rnn
+
+    def lam_init(key, shape, dtype):
+        # a in [0.9, 0.999]:  Lambda = softplus^{-1}(-log(a)/c)
+        u = jax.random.uniform(key, shape, minval=0.9, maxval=0.999)
+        t = -jnp.log(u) / RGLRU_C
+        return jnp.log(jnp.expm1(t)).astype(dtype)
+
+    return {
+        "in_proj": dense_spec(d, r, ("fsdp", "heads"), xbar=xbar),
+        "gate_proj": dense_spec(d, r, ("fsdp", "heads"), xbar=xbar),
+        "conv_w": ParamSpec((cfg.d_conv, r), (None, "heads"),
+                            lambda k, s, dt: (jax.random.normal(k, s) /
+                                              jnp.sqrt(1.0 * s[0])).astype(dt)),
+        "conv_b": ParamSpec((r,), ("heads",), zeros_init()),
+        "w_a": dense_spec(r, r, ("heads", None)),      # recurrence gate
+        "w_x": dense_spec(r, r, ("heads", None)),      # input gate
+        "lam": ParamSpec((r,), (None,), lam_init),
+        "out_proj": dense_spec(r, d, ("heads", "fsdp"), xbar=xbar),
+    }
+
+
+def _gates(params, u, compute_dtype):
+    r = jax.nn.sigmoid(dense_apply(params["w_a"], u,
+                                   compute_dtype=compute_dtype).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(params["w_x"], u,
+                                   compute_dtype=compute_dtype).astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(params: dict, x: jax.Array, cfg: RGLRUConfig, *,
+                cache: dict | None = None,
+                xbar: XbarMode | None = None,
+                compute_dtype: Any = jnp.bfloat16
+                ) -> tuple[jax.Array, dict | None]:
+    """x: (B, L, d).  Decode when cache is not None and L == 1."""
+    B, L, _ = x.shape
+    u = dense_apply(params["in_proj"], x, compute_dtype=compute_dtype,
+                    xbar=xbar)
+    gate = jax.nn.gelu(dense_apply(params["gate_proj"], x,
+                                   compute_dtype=compute_dtype, xbar=xbar))
+    new_cache = cache
+    k = cfg.d_conv
+
+    if cache is not None and L == 1:
+        window = jnp.concatenate(
+            [cache["conv"], u.astype(cache["conv"].dtype)], axis=1)  # (B,k,C)
+        conv_state = window[:, 1:]
+        uc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32))
+        uc = (uc + params["conv_b"].astype(jnp.float32))[:, None, :]
+        a, b = _gates(params, uc.astype(compute_dtype), compute_dtype)
+        h = a[:, 0] * cache["state"].astype(jnp.float32) + b[:, 0]
+        y = h[:, None, :]
+        new_cache = {"conv": conv_state, "state": h.astype(cache["state"].dtype),
+                     "length": cache["length"] + 1}
+    else:
+        up = jnp.pad(u.astype(jnp.float32), ((0, 0), (k - 1, 0), (0, 0)))
+        uc = sum(up[:, i : i + L, :] * params["conv_w"].astype(jnp.float32)[i]
+                 for i in range(k))
+        uc = uc + params["conv_b"].astype(jnp.float32)
+        a, b = _gates(params, uc.astype(compute_dtype), compute_dtype)
+        a = shard_activation(a, "batch", "seq", "heads")
+        b = shard_activation(b, "batch", "seq", "heads")
+
+        def combine(l, r_):
+            al, bl = l
+            ar, br = r_
+            return al * ar, bl * ar + br
+
+        _, y = jax.lax.associative_scan(combine, (a, b), axis=1)
+        if cache is not None:
+            new_cache = {
+                "conv": u[:, -(k - 1):, :].astype(cache["conv"].dtype),
+                "state": y[:, -1, :].astype(cache["state"].dtype),
+                "length": cache["length"] + L,
+            }
+
+    y = y.astype(compute_dtype) * gate
+    y = shard_activation(y, "batch", "seq", "heads")
+    return dense_apply(params["out_proj"], y, compute_dtype=compute_dtype,
+                       xbar=xbar), new_cache
+
+
+def init_rglru_cache(cfg: RGLRUConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_rnn), dtype),
+        "state": jnp.zeros((batch, cfg.d_rnn), dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,60 @@
+"""Rotary position embeddings, including M-RoPE (Qwen2-VL's 3-section rope).
+
+``apply_rope(x, positions)`` rotates the head_dim of ``x`` (..., seq, heads,
+head_dim) by per-token positions.  M-RoPE splits head_dim into (t, h, w)
+sections each rotated by its own position stream; for the stubbed VLM
+frontend the three streams coincide for text tokens and are synthesized for
+patch tokens (Qwen2-VL semantics, arXiv:2409.12191).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions (..., seq) -> angles (..., seq, dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    return positions[..., None].astype(jnp.float32) * freqs
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (batch, seq, heads, head_dim); positions: (batch, seq)."""
+    d = x.shape[-1]
+    ang = _rope_angles(positions, d, theta)          # (b, s, d/2)
+    cos = jnp.cos(ang)[..., None, :]                 # (b, s, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, sections: tuple[int, int, int],
+                *, theta: float = 10000.0) -> jax.Array:
+    """M-RoPE: positions_3d (batch, seq, 3) = (t, h, w) position streams;
+    ``sections`` gives rotary dims (halved) per stream, summing to
+    head_dim//2."""
+    d = x.shape[-1]
+    assert sum(sections) == d // 2, (sections, d)
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    # Which stream drives each frequency band: [t]*s0 + [h]*s1 + [w]*s2.
+    stream = jnp.concatenate([
+        jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)])
+    pos = jnp.take_along_axis(
+        positions_3d.astype(jnp.float32),                      # (b, s, 3)
+        jnp.broadcast_to(stream[None, None, :], positions_3d.shape[:2] + (d // 2,)),
+        axis=-1)                                               # (b, s, d/2)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def text_mrope_positions(positions: jax.Array) -> jax.Array:
+    """Text tokens: all three streams equal the 1-D position."""
+    return jnp.broadcast_to(positions[..., None], positions.shape + (3,))

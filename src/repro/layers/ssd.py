@@ -1,0 +1,237 @@
+"""Mamba-2 block via the SSD (state-space duality) chunked algorithm.
+
+Training/prefill runs the block-decomposed SSD form (arXiv:2405.21060 §6):
+intra-chunk quadratic "attention" plus inter-chunk state passing — O(L·c)
+instead of O(L²) — with a sequential lax.scan over chunks for the state
+recurrence.  Decode is the O(1) recurrent step on a (H, P, N) state.
+
+Per the arch-applicability note (DESIGN.md §4): the projections are
+crossbar-able; the selective scan itself is a recurrence, not a static
+matmul, so it always runs native.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import ParamSpec, fanin_init, shard_activation, zeros_init
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+from repro.layers.norms import rmsnorm_apply, rmsnorm_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    d_model: int
+    d_state: int = 128
+    head_dim: int = 64          # P
+    expand: int = 2
+    n_groups: int = 1           # B/C groups (G)
+    d_conv: int = 4
+    chunk: int = 256
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def ssd_spec(cfg: SSDConfig, xbar: XbarMode | None = None) -> dict:
+    d, di, H = cfg.d_model, cfg.d_inner, cfg.n_heads
+    gn = cfg.n_groups * cfg.d_state
+    proj_out = 2 * di + 2 * gn + H          # [z, x, B, C, dt]
+
+    def a_log_init(key, shape, dtype):
+        a = jax.random.uniform(key, shape, minval=1.0, maxval=16.0)
+        return jnp.log(a).astype(dtype)
+
+    def dt_bias_init(key, shape, dtype):
+        u = jax.random.uniform(key, shape)
+        dt = jnp.exp(u * (jnp.log(cfg.dt_max) - jnp.log(cfg.dt_min))
+                     + jnp.log(cfg.dt_min))
+        # inverse softplus
+        return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+
+    return {
+        "in_proj": dense_spec(d, proj_out, ("fsdp", "heads"), xbar=xbar),
+        "conv_w": ParamSpec((cfg.d_conv, cfg.conv_dim), (None, "heads"),
+                            fanin_init(0)),
+        "conv_b": ParamSpec((cfg.conv_dim,), ("heads",), zeros_init()),
+        "a_log": ParamSpec((H,), (None,), a_log_init),
+        "d_skip": ParamSpec((H,), (None,), lambda k, s, d_: jnp.ones(s, d_)),
+        "dt_bias": ParamSpec((H,), (None,), dt_bias_init),
+        "norm": rmsnorm_spec(di),
+        "out_proj": dense_spec(di, d, ("heads", "fsdp"), xbar=xbar),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, L, C); w: (k, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_scan(x, dt, A, Bm, Cm, chunk):
+    """Chunked SSD.  x: (B,L,H,P); dt: (B,L,H); A: (H,) negative;
+    Bm/Cm: (B,L,G,N).  Returns (y, final_state (B,H,P,N)).
+
+    Chunks are processed *sequentially* inside one lax.scan carrying the
+    inter-chunk state; the body is rematerialized, so peak memory holds one
+    chunk's quadratic (c x c) tensors instead of all of them (the naive
+    all-chunks-at-once form needed 37 GiB/device on mamba2 train_4k).
+    """
+    Bsz, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert L % chunk == 0
+    nc = L // chunk
+    rep = H // G
+
+    # (nc, B, c, ...) chunk-major for the scan
+    xc = jnp.moveaxis(x.reshape(Bsz, nc, chunk, H, P), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bsz, nc, chunk, H), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(Bsz, nc, chunk, G, N), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(Bsz, nc, chunk, G, N), 1, 0)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    @jax.checkpoint
+    def chunk_body(S_prev, inp):
+        xb, dtb, Bb, Cb = inp                  # (B,c,H,P), (B,c,H), (B,c,G,N)
+        dA = dtb * A[None, None, :]            # (B,c,H)
+        cum = jnp.cumsum(dA, axis=1)           # (B,c,H)
+        total = cum[:, -1, :]                  # (B,H)
+
+        # intra-chunk: att[b,h,i,j] = C_i.B_j exp(cum_i-cum_j) dt_j, i>=j
+        CB = jnp.einsum("bcgi,bsgi->bgcs", Cb, Bb)       # (B,G,c,c)
+        CB = jnp.repeat(CB, rep, axis=1)                 # (B,H,c,c)
+        cum_h = jnp.moveaxis(cum, 2, 1)                  # (B,H,c)
+        decay = jnp.exp(jnp.minimum(
+            cum_h[:, :, :, None] - cum_h[:, :, None, :], 0.0))
+        att = jnp.where(mask, CB * decay, 0.0)
+        att = att * jnp.moveaxis(dtb, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhcs,bshp->bchp", att, xb)
+
+        # local end-of-chunk state
+        w = jnp.exp(total[:, None, :] - cum) * dtb       # (B,c,H)
+        Brep = jnp.repeat(Bb, rep, axis=2)               # (B,c,H,N)
+        S_loc = jnp.einsum("bsh,bshv,bshp->bhpv", w, Brep, xb)
+
+        # inter-chunk contribution + state update
+        Crep = jnp.repeat(Cb, rep, axis=2)               # (B,c,H,N)
+        y_inter = jnp.einsum("bshv,bhpv->bshp", Crep, S_prev) \
+            * jnp.exp(cum)[..., None]
+        S_new = S_prev * jnp.exp(total)[:, :, None, None] + S_loc
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    S_final, yc = jax.lax.scan(chunk_body, S0,
+                               (xc.astype(jnp.float32), dtc,
+                                Bc.astype(jnp.float32),
+                                Cc.astype(jnp.float32)))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, L, H, P)
+    return y, S_final
+
+
+def ssd_apply(params: dict, x: jax.Array, cfg: SSDConfig, *,
+              cache: dict | None = None,
+              xbar: XbarMode | None = None,
+              compute_dtype: Any = jnp.bfloat16
+              ) -> tuple[jax.Array, dict | None]:
+    """x: (B, L, d) (train/prefill, cache None or fresh) or (B, 1, d) decode."""
+    B, L, _ = x.shape
+    di, H, P = cfg.d_inner, cfg.n_heads, cfg.head_dim
+    G, N = cfg.n_groups, cfg.d_state
+    gn = G * N
+
+    zxbcdt = dense_apply(params["in_proj"], x, compute_dtype=compute_dtype,
+                         xbar=xbar)
+    z, xbc, dt = jnp.split(zxbcdt, [di, di + di + 2 * gn], axis=-1)
+    A = -jnp.exp(params["a_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+
+    new_cache = cache
+    if cache is not None and L == 1:
+        # ---- decode: rolling conv state + recurrent state update ----
+        window = jnp.concatenate(
+            [cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)  # (B,k,C)
+        conv_state = window[:, 1:]
+        xbc_t = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                           params["conv_w"].astype(jnp.float32))
+        xbc_t = jax.nn.silu(xbc_t + params["conv_b"].astype(jnp.float32))
+        xi, Bt, Ct = jnp.split(xbc_t, [di, di + gn], axis=-1)
+        xh = xi.reshape(B, H, P)
+        Bt = Bt.reshape(B, G, N)
+        Ct = Ct.reshape(B, G, N)
+        rep = H // G
+        Brep = jnp.repeat(Bt, rep, axis=1)             # (B,H,N)
+        Crep = jnp.repeat(Ct, rep, axis=1)
+        dA = jnp.exp(dt[:, 0, :] * A[None, :])         # (B,H)
+        S = cache["state"].astype(jnp.float32)
+        S = S * dA[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt[:, 0, :], Brep, xh)
+        y = jnp.einsum("bhn,bhpn->bhp", Crep, S)
+        y = y + params["d_skip"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B, 1, di)
+        new_cache = {"conv": conv_state, "state": S.astype(cache["state"].dtype),
+                     "length": cache["length"] + 1}
+    else:
+        xbc_conv = _causal_conv(xbc.astype(jnp.float32),
+                                params["conv_w"].astype(jnp.float32),
+                                params["conv_b"].astype(jnp.float32))
+        xi, Bm, Cm = jnp.split(xbc_conv, [di, di + gn], axis=-1)
+        xh = xi.reshape(B, L, H, P)
+        Bm = Bm.reshape(B, L, G, N)
+        Cm = Cm.reshape(B, L, G, N)
+        xh = shard_activation(xh, "batch", "seq", "heads", None)
+        # pad L to a chunk multiple; padded steps have dt=0 so the state
+        # passes through unchanged (exp(0)=1 decay, zero input)
+        chunk = min(cfg.chunk, L)
+        pad = (-L) % chunk
+        if pad:
+            pad4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+            xh_p = jnp.pad(xh, pad4)
+            Bm_p = jnp.pad(Bm, pad4)
+            Cm_p = jnp.pad(Cm, pad4)
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        else:
+            xh_p, Bm_p, Cm_p, dt_p = xh, Bm, Cm, dt
+        y, S_final = _ssd_scan(xh_p, dt_p, A, Bm_p, Cm_p, chunk)
+        y = y[:, :L]
+        y = y + params["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+        y = y.reshape(B, L, di)
+        if cache is not None:
+            new_cache = {
+                "conv": xbc[:, -(cfg.d_conv - 1):, :].astype(cache["conv"].dtype),
+                "state": S_final.astype(cache["state"].dtype),
+                "length": cache["length"] + L,
+            }
+
+    # gated RMSNorm then out projection (Mamba-2)
+    y = rmsnorm_apply(params["norm"], y.astype(compute_dtype))
+    y = y * jax.nn.silu(z.astype(compute_dtype))
+    y = shard_activation(y, "batch", "seq", "heads")
+    return dense_apply(params["out_proj"], y, compute_dtype=compute_dtype,
+                       xbar=xbar), new_cache
+
+
+def init_ssd_cache(cfg: SSDConfig, batch: int, dtype=jnp.float32) -> dict:
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.conv_dim), dtype),
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,186 @@
+"""Encoder-decoder model (seamless-m4t backbone).
+
+Encoder: bidirectional attention blocks over stubbed frame embeddings.
+Decoder: causal self-attention + cross-attention + FFN blocks.
+Both stacks scan over layers.  Decode caches: per-layer self KV cache plus
+precomputed cross KV (filled once from the encoder output).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.dist.sharding import shard_activation, stack_specs
+from repro.layers import attention as attn_mod
+from repro.layers import embedding as emb_mod
+from repro.layers import mlp as mlp_mod
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+from repro.models.lm import _norm_fns, _remat_wrap
+
+
+def enc_block_spec(cfg: ModelConfig, xbar) -> dict:
+    nspec, _ = _norm_fns(cfg)
+    d = cfg.d_model
+    return {"ln1": nspec(d), "attn": attn_mod.attention_spec(cfg.attn(), xbar),
+            "ln2": nspec(d),
+            "mlp": mlp_mod.mlp_spec(d, cfg.d_ff, gated=cfg.gated_mlp, xbar=xbar)}
+
+
+def dec_block_spec(cfg: ModelConfig, xbar) -> dict:
+    nspec, _ = _norm_fns(cfg)
+    d = cfg.d_model
+    return {"ln1": nspec(d), "self": attn_mod.attention_spec(cfg.attn(), xbar),
+            "ln_x": nspec(d), "cross": attn_mod.attention_spec(cfg.attn(), xbar),
+            "ln2": nspec(d),
+            "mlp": mlp_mod.mlp_spec(d, cfg.d_ff, gated=cfg.gated_mlp, xbar=xbar)}
+
+
+def encdec_spec(cfg: ModelConfig) -> dict:
+    xbar = XbarMode.from_config(cfg)
+    return {
+        "src_proj": dense_spec(cfg.d_model, cfg.d_model, ("fsdp", None)),
+        "embed": emb_mod.embedding_spec(cfg.padded_vocab, cfg.d_model),
+        "encoder": stack_specs(enc_block_spec(cfg, xbar), cfg.encoder_layers),
+        "enc_norm": _norm_fns(cfg)[0](cfg.d_model),
+        "decoder": stack_specs(dec_block_spec(cfg, xbar), cfg.n_layers),
+        "final_norm": _norm_fns(cfg)[0](cfg.d_model),
+        "lm_head": emb_mod.lm_head_spec(cfg.d_model, cfg.padded_vocab, xbar),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, src_frames: jax.Array
+           ) -> jax.Array:
+    """src_frames: (B, S, d) stubbed frontend embeddings -> encoder states."""
+    import dataclasses as _dc
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    xbar = XbarMode.from_config(cfg)
+    _, napply = _norm_fns(cfg)
+    acfg = _dc.replace(cfg.attn(), causal=False)
+    x = dense_apply(params["src_proj"], src_frames, compute_dtype=compute_dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    espec = enc_block_spec(cfg, xbar)
+
+    def body(x, p):
+        p = shd.constrain_like_specs(p, espec)
+        p = shd.cast_for_compute(p, compute_dtype)
+        x = shard_activation(x, "batch", "seq", "act_embed")
+        h, _ = attn_mod.attention_apply(p["attn"], napply(p["ln1"], x), acfg,
+                                        positions=positions, xbar=xbar,
+                                        compute_dtype=compute_dtype)
+        x = x + h
+        x = x + mlp_mod.mlp_apply(p["mlp"], napply(p["ln2"], x),
+                                  act=cfg.mlp_act, xbar=xbar,
+                                  compute_dtype=compute_dtype)
+        return x, None
+
+    body_w = _remat_wrap(cfg, body)
+    if cfg.unroll_layers:
+        for i in range(cfg.encoder_layers):
+            x, _ = body_w(x, jax.tree.map(lambda a: a[i], params["encoder"]))
+    else:
+        x, _ = jax.lax.scan(body_w, x, params["encoder"])
+    return napply(params["enc_norm"], x)
+
+
+def decode_stack(cfg: ModelConfig, params: dict, y: jax.Array, *,
+                 positions: jax.Array, enc_out: jax.Array | None,
+                 caches: dict | None = None
+                 ) -> tuple[jax.Array, dict | None]:
+    """Decoder over target embeddings ``y``.
+
+    Train: caches None, enc_out given (cross k/v computed on the fly).
+    Decode: caches = {"self": stacked self caches, "cross": stacked k/v}.
+    """
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    xbar = XbarMode.from_config(cfg)
+    _, napply = _norm_fns(cfg)
+    acfg = cfg.attn()
+
+    dspec = dec_block_spec(cfg, xbar)
+
+    def body(carry, xs):
+        x = carry
+        if caches is not None:
+            p, cache = xs
+            self_c, cross_c = cache["self"], cache["cross"]
+        else:
+            p, self_c, cross_c = xs, None, None
+        p = shd.constrain_like_specs(p, dspec)
+        p = shd.cast_for_compute(p, compute_dtype)
+        x = shard_activation(x, "batch", "seq", "act_embed")
+        h, self_c = attn_mod.attention_apply(
+            p["self"], napply(p["ln1"], x), acfg, positions=positions,
+            cache=self_c, xbar=xbar, compute_dtype=compute_dtype)
+        x = x + h
+        h, cross_c = attn_mod.attention_apply(
+            p["cross"], napply(p["ln_x"], x), acfg, positions=positions,
+            cache=cross_c, kv_source=enc_out, xbar=xbar,
+            compute_dtype=compute_dtype)
+        x = x + h
+        x = x + mlp_mod.mlp_apply(p["mlp"], napply(p["ln2"], x),
+                                  act=cfg.mlp_act, xbar=xbar,
+                                  compute_dtype=compute_dtype)
+        if caches is not None:
+            return x, {"self": self_c, "cross": cross_c}
+        return x, None
+
+    body_w = _remat_wrap(cfg, body)
+    if cfg.unroll_layers:
+        per_caches = []
+        for i in range(cfg.n_layers):
+            p_i = jax.tree.map(lambda a: a[i], params["decoder"])
+            if caches is not None:
+                c_i = jax.tree.map(lambda a: a[i], caches)
+                y, c = body_w(y, (p_i, c_i))
+                per_caches.append(c)
+            else:
+                y, _ = body_w(y, p_i)
+        new_caches = (jax.tree.map(lambda *ls: jnp.stack(ls), *per_caches)
+                      if caches is not None else None)
+    else:
+        xs = (params["decoder"], caches) if caches is not None \
+            else params["decoder"]
+        y, new_caches = jax.lax.scan(body_w, y, xs)
+    y = napply(params["final_norm"], y)
+    return y, (new_caches if caches is not None else None)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      src_len: int, dtype=jnp.bfloat16) -> dict:
+    hd = cfg.head_dim
+    K = cfg.n_kv_heads
+    L = cfg.n_layers
+    self_c = attn_mod.init_self_cache(cfg.attn(), batch, max_len, dtype)
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (L,) + a.shape).copy(), self_c),
+        "cross": {
+            "k": jnp.zeros((L, batch, src_len, K, hd), dtype),
+            "v": jnp.zeros((L, batch, src_len, K, hd), dtype),
+        },
+    }
+
+
+def fill_cross_cache(cfg: ModelConfig, params: dict, enc_out: jax.Array,
+                     dtype=jnp.bfloat16) -> dict:
+    """Precompute per-layer cross k/v from the encoder output."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    xbar = XbarMode.from_config(cfg)
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def per_layer(p):
+        k = dense_apply(p["cross"]["wk"], enc_out, compute_dtype=compute_dtype,
+                        xbar=xbar)
+        v = dense_apply(p["cross"]["wv"], enc_out, compute_dtype=compute_dtype,
+                        xbar=xbar)
+        B, S, _ = k.shape
+        return {"k": k.reshape(B, S, K, hd).astype(dtype),
+                "v": v.reshape(B, S, K, hd).astype(dtype)}
+
+    return jax.vmap(per_layer)(params["decoder"])

@@ -1,0 +1,305 @@
+"""Decoder-only LM assembly: pattern-cycled blocks under lax.scan.
+
+The layer stack is grouped into *periods* (one cycle of
+``cfg.block_pattern``); periods are stacked on a leading axis and executed
+with ``jax.lax.scan`` so the HLO stays O(1) in depth — essential for
+compiling 80-layer configs on the 512-device dry-run mesh.  Layers that do
+not fit whole periods (MoE dense prefix, RecurrentGemma's trailing
+[rec, rec]) run unscanned before/after the scan.
+
+Block kinds:
+  attn   pre-norm self-attention + MLP          (dense archs)
+  local  windowed self-attention + MLP          (recurrentgemma)
+  moe    pre-norm self-attention + MoE FFN      (moe archs)
+  rec    RG-LRU recurrent block + MLP           (recurrentgemma)
+  ssd    Mamba-2 block (single residual)        (mamba2)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import (cast_for_compute, constrain_like_specs,
+                                 shard_activation, stack_specs)
+from repro.layers import attention as attn_mod
+from repro.layers import embedding as emb_mod
+from repro.layers import mlp as mlp_mod
+from repro.layers import moe as moe_mod
+from repro.layers import rglru as rglru_mod
+from repro.layers import ssd as ssd_mod
+from repro.layers.linear import XbarMode, dense_apply, dense_spec
+from repro.layers.norms import (layernorm_apply, layernorm_spec,
+                                rmsnorm_apply, rmsnorm_spec)
+
+
+def _norm_fns(cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return layernorm_spec, layernorm_apply
+    return rmsnorm_spec, rmsnorm_apply
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def block_spec(cfg: ModelConfig, kind: str, xbar: XbarMode | None) -> dict:
+    nspec, _ = _norm_fns(cfg)
+    d = cfg.d_model
+    if kind == "ssd":
+        return {"ln": nspec(d), "ssd": ssd_mod.ssd_spec(cfg.ssd(), xbar)}
+    if kind == "rec":
+        return {"ln1": nspec(d),
+                "mix": rglru_mod.rglru_spec(cfg.rglru(), xbar),
+                "ln2": nspec(d),
+                "mlp": mlp_mod.mlp_spec(d, cfg.d_ff, gated=cfg.gated_mlp,
+                                        xbar=xbar)}
+    if kind == "moe":
+        return {"ln1": nspec(d),
+                "attn": attn_mod.attention_spec(cfg.attn(None), xbar),
+                "ln2": nspec(d),
+                "moe": moe_mod.moe_spec(cfg.moe(), xbar)}
+    window = cfg.window if kind == "local" else None
+    return {"ln1": nspec(d),
+            "attn": attn_mod.attention_spec(cfg.attn(window), xbar),
+            "ln2": nspec(d),
+            "mlp": mlp_mod.mlp_spec(d, cfg.d_ff, gated=cfg.gated_mlp,
+                                    xbar=xbar)}
+
+
+def block_apply(cfg: ModelConfig, kind: str, params: dict, x: jax.Array, *,
+                positions: jax.Array, cache: dict | None,
+                xbar: XbarMode | None, compute_dtype: Any
+                ) -> tuple[jax.Array, dict | None, jax.Array]:
+    _, napply = _norm_fns(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    x = shard_activation(x, "batch", "seq", "act_embed")
+    if kind == "ssd":
+        h, cache = ssd_mod.ssd_apply(params["ssd"], napply(params["ln"], x),
+                                     cfg.ssd(), cache=cache, xbar=xbar,
+                                     compute_dtype=compute_dtype)
+        return x + h, cache, aux
+    if kind == "rec":
+        h, cache = rglru_mod.rglru_apply(params["mix"], napply(params["ln1"], x),
+                                         cfg.rglru(), cache=cache, xbar=xbar,
+                                         compute_dtype=compute_dtype)
+        x = x + h
+        x = x + mlp_mod.mlp_apply(params["mlp"], napply(params["ln2"], x),
+                                  act=cfg.mlp_act, xbar=xbar,
+                                  compute_dtype=compute_dtype)
+        return x, cache, aux
+    # attn / local / moe
+    window = cfg.window if kind == "local" else None
+    h, cache = attn_mod.attention_apply(
+        params["attn"], napply(params["ln1"], x), cfg.attn(window),
+        positions=positions, cache=cache, xbar=xbar,
+        compute_dtype=compute_dtype)
+    x = x + h
+    if kind == "moe":
+        h, aux = moe_mod.moe_apply(params["moe"], napply(params["ln2"], x),
+                                   cfg.moe(), xbar=xbar,
+                                   compute_dtype=compute_dtype)
+    else:
+        h = mlp_mod.mlp_apply(params["mlp"], napply(params["ln2"], x),
+                              act=cfg.mlp_act, xbar=xbar,
+                              compute_dtype=compute_dtype)
+    return x + h, cache, aux
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     dtype) -> dict:
+    if kind == "ssd":
+        return ssd_mod.init_ssd_cache(cfg.ssd(), batch)
+    if kind == "rec":
+        return rglru_mod.init_rglru_cache(cfg.rglru(), batch)
+    window = cfg.window if kind == "local" else None
+    return attn_mod.init_self_cache(cfg.attn(window), batch, max_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Stack layout: prefix blocks, scanned periods, suffix blocks
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StackLayout:
+    prefix: tuple[str, ...]
+    pattern: tuple[str, ...]
+    periods: int
+    suffix: tuple[str, ...]
+
+
+def stack_layout(cfg: ModelConfig) -> StackLayout:
+    kinds = cfg.layer_kinds()
+    prefix = tuple(kinds[: cfg.first_dense_layers])
+    rest = kinds[cfg.first_dense_layers:]
+    pat = cfg.block_pattern
+    periods = len(rest) // len(pat)
+    suffix = tuple(rest[periods * len(pat):])
+    return StackLayout(prefix, pat, periods, suffix)
+
+
+def _period_spec(cfg: ModelConfig, xbar) -> dict:
+    return {f"b{i}_{k}": block_spec(cfg, k, xbar)
+            for i, k in enumerate(cfg.block_pattern)}
+
+
+def lm_spec(cfg: ModelConfig) -> dict:
+    xbar = XbarMode.from_config(cfg)
+    lay = stack_layout(cfg)
+    spec: dict[str, Any] = {
+        "embed": emb_mod.embedding_spec(cfg.padded_vocab, cfg.d_model),
+        "prefix": tuple(block_spec(cfg, k, xbar) for k in lay.prefix),
+        "suffix": tuple(block_spec(cfg, k, xbar) for k in lay.suffix),
+        "final_norm": _norm_fns(cfg)[0](cfg.d_model),
+    }
+    if lay.periods:
+        spec["stack"] = stack_specs(_period_spec(cfg, xbar), lay.periods)
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = emb_mod.lm_head_spec(cfg.d_model, cfg.padded_vocab,
+                                               xbar)
+    if cfg.vlm_patches:
+        spec["patch_merger"] = dense_spec(cfg.d_model, cfg.d_model,
+                                          ("fsdp", None))
+    return spec
+
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16) -> dict:
+    lay = stack_layout(cfg)
+    cache: dict[str, Any] = {
+        "prefix": tuple(init_block_cache(cfg, k, batch, max_len, dtype)
+                        for k in lay.prefix),
+        "suffix": tuple(init_block_cache(cfg, k, batch, max_len, dtype)
+                        for k in lay.suffix),
+    }
+    if lay.periods:
+        period = {f"b{i}_{k}": init_block_cache(cfg, k, batch, max_len, dtype)
+                  for i, k in enumerate(lay.pattern)}
+        cache["stack"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (lay.periods,) + a.shape).copy(),
+            period)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(cfg: ModelConfig, fn: Callable) -> Callable:
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def embed_inputs(cfg: ModelConfig, params: dict, batch: dict,
+                 compute_dtype: Any) -> jax.Array:
+    x = emb_mod.embed_apply(params["embed"], batch["tokens"], compute_dtype)
+    if cfg.vlm_patches and "patch_embeds" in batch:
+        patches = dense_apply(params["patch_merger"], batch["patch_embeds"],
+                              compute_dtype=compute_dtype)
+        x = jax.lax.dynamic_update_slice(
+            x, patches.astype(x.dtype), (0, 0, 0))
+    return x
+
+
+def lm_forward(cfg: ModelConfig, params: dict, x: jax.Array, *,
+               positions: jax.Array, caches: dict | None = None
+               ) -> tuple[jax.Array, dict | None, jax.Array]:
+    """x: (B, L, d) embedded inputs -> (hidden, new_caches, aux_loss)."""
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    xbar = XbarMode.from_config(cfg)
+    lay = stack_layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: dict[str, Any] = {"prefix": [], "suffix": []}
+
+    for i, kind in enumerate(lay.prefix):
+        c = caches["prefix"][i] if caches else None
+        x, c, a = block_apply(cfg, kind, params["prefix"][i], x,
+                              positions=positions, cache=c, xbar=xbar,
+                              compute_dtype=compute_dtype)
+        new_caches["prefix"].append(c)
+        aux = aux + a
+
+    if lay.periods:
+        period_spec = _period_spec(cfg, xbar)
+
+        def period_body(carry, xs):
+            x, aux = carry
+            if caches is not None:
+                p_params, p_cache = xs
+            else:
+                p_params, p_cache = xs, None
+            # pin per-layer slices to their FSDP/TP shardings (see
+            # dist.sharding.constrain_like_specs for why), then cast to the
+            # compute dtype so the FSDP gather carries bf16
+            p_params = constrain_like_specs(p_params, period_spec)
+            p_params = cast_for_compute(p_params, compute_dtype)
+            out_cache = {}
+            for i, kind in enumerate(lay.pattern):
+                key = f"b{i}_{kind}"
+                c = p_cache[key] if p_cache is not None else None
+                x, c, a = block_apply(cfg, kind, p_params[key], x,
+                                      positions=positions, cache=c,
+                                      xbar=xbar, compute_dtype=compute_dtype)
+                out_cache[key] = c
+                aux = aux + a
+            if caches is not None:
+                return (x, aux), out_cache
+            return (x, aux), None
+
+        body = _remat_wrap(cfg, period_body)
+        if cfg.unroll_layers:
+            per_caches = []
+            for p in range(lay.periods):
+                p_params = jax.tree.map(lambda a: a[p], params["stack"])
+                if caches is not None:
+                    p_cache = jax.tree.map(lambda a: a[p], caches["stack"])
+                    (x, aux), c = body((x, aux), (p_params, p_cache))
+                    per_caches.append(c)
+                else:
+                    (x, aux), _ = body((x, aux), p_params)
+            if caches is not None:
+                new_caches["stack"] = jax.tree.map(
+                    lambda *ls: jnp.stack(ls), *per_caches)
+        else:
+            xs = (params["stack"], caches["stack"]) if caches is not None \
+                else params["stack"]
+            (x, aux), stack_caches = jax.lax.scan(body, (x, aux), xs)
+            new_caches["stack"] = stack_caches
+
+    for i, kind in enumerate(lay.suffix):
+        c = caches["suffix"][i] if caches else None
+        x, c, a = block_apply(cfg, kind, params["suffix"][i], x,
+                              positions=positions, cache=c, xbar=xbar,
+                              compute_dtype=compute_dtype)
+        new_caches["suffix"].append(c)
+        aux = aux + a
+
+    x = _norm_fns(cfg)[1](params["final_norm"], x)
+    new_caches["prefix"] = tuple(new_caches["prefix"])
+    new_caches["suffix"] = tuple(new_caches["suffix"])
+    return x, (new_caches if caches is not None else None), aux
+
+
+def lm_logits(cfg: ModelConfig, params: dict, hidden: jax.Array) -> jax.Array:
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        logits = emb_mod.lm_head_apply({}, hidden,
+                                       tied_table=params["embed"]["table"],
+                                       compute_dtype=compute_dtype,
+                                       valid_vocab=cfg.vocab_size)
+    else:
+        logits = emb_mod.lm_head_apply(params["lm_head"], hidden,
+                                       compute_dtype=compute_dtype,
+                                       valid_vocab=cfg.vocab_size)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits

@@ -1,0 +1,191 @@
+"""Model facade: one object per architecture exposing the framework API.
+
+``build_model(cfg)`` returns a :class:`Model` with:
+
+  spec           ParamSpec tree (drives init / abstract / shardings)
+  init(key)      concrete parameters
+  loss_fn        (params, batch) -> (loss, metrics)       [train graphs]
+  prefill_fn     (params, batch) -> logits                [prefill graphs]
+  decode_fn      (params, cache, batch) -> (logits, cache) [decode graphs]
+  init_cache     (batch, max_len) -> cache pytree
+  input_specs    (shape kind) -> ShapeDtypeStruct pytrees for the dry-run
+
+All functions are pure and jit-able; the launcher wraps them in pjit with
+shardings derived from ``spec``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.layers.embedding import cross_entropy
+from repro.layers.rope import text_mrope_positions
+from repro.models import encdec as ed
+from repro.models import lm as lm_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    spec: Any
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+    def init(self, key: jax.Array):
+        return shd.init_params(key, self.spec)
+
+    def abstract_params(self):
+        return shd.abstract_params(self.spec)
+
+
+def _positions_for(cfg: ModelConfig, B: int, L: int,
+                   start: jax.Array | int = 0) -> jax.Array:
+    pos = jnp.arange(L)[None, :] + jnp.asarray(start)
+    pos = jnp.broadcast_to(pos, (B, L))
+    if cfg.mrope_sections is not None:
+        return text_mrope_positions(pos)
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only families (dense, moe, ssm, hybrid, vlm)
+# ---------------------------------------------------------------------------
+
+def _build_lm(cfg: ModelConfig) -> Model:
+    spec = lm_mod.lm_spec(cfg)
+
+    def forward_logits(params, batch):
+        compute_dtype = jnp.dtype(cfg.compute_dtype)
+        B, L = batch["tokens"].shape
+        x = lm_mod.embed_inputs(cfg, params, batch, compute_dtype)
+        positions = _positions_for(cfg, B, L)
+        h, _, aux = lm_mod.lm_forward(cfg, params, x, positions=positions)
+        return lm_mod.lm_logits(cfg, params, h), aux
+
+    def loss_fn(params, batch):
+        logits, aux = forward_logits(params, batch)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss + aux, {"ce": loss, "aux": aux}
+
+    def prefill_fn(params, batch):
+        logits, _ = forward_logits(params, batch)
+        return logits
+
+    def decode_fn(params, cache, batch):
+        compute_dtype = jnp.dtype(cfg.compute_dtype)
+        tok = batch["tokens"]                      # (B, 1)
+        B = tok.shape[0]
+        length = batch["length"]                   # scalar int32
+        x = lm_mod.embed_inputs(cfg, params, {"tokens": tok}, compute_dtype)
+        positions = _positions_for(cfg, B, 1, start=length)
+        h, cache, _ = lm_mod.lm_forward(cfg, params, x, positions=positions,
+                                        caches=cache)
+        return lm_mod.lm_logits(cfg, params, h), cache
+
+    def init_cache(batch: int, max_len: int, dtype=None):
+        dtype = jnp.dtype(cfg.kv_cache_dtype) if dtype is None else dtype
+        return lm_mod.init_lm_cache(cfg, batch, max_len, dtype)
+
+    def input_specs(kind: str, seq_len: int, global_batch: int):
+        tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+        if kind == "train":
+            batch = {"tokens": tok, "labels": tok}
+            if cfg.vlm_patches:
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (global_batch, cfg.vlm_patches, cfg.d_model), jnp.float32)
+            return batch
+        if kind == "prefill":
+            batch = {"tokens": tok}
+            if cfg.vlm_patches:
+                batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                    (global_batch, cfg.vlm_patches, cfg.d_model), jnp.float32)
+            return batch
+        # decode: one token, cache of seq_len capacity (seq_len-1 valid)
+        batch = {"tokens": jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),
+                 "length": jax.ShapeDtypeStruct((), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: init_cache(global_batch, seq_len))
+        return batch, cache
+
+    return Model(cfg, spec, loss_fn, prefill_fn, decode_fn, init_cache,
+                 input_specs)
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family
+# ---------------------------------------------------------------------------
+
+def _build_encdec(cfg: ModelConfig) -> Model:
+    spec = ed.encdec_spec(cfg)
+
+    def _decode_embed(params, tok, compute_dtype):
+        return params["embed"]["table"].astype(compute_dtype)[tok]
+
+    def loss_fn(params, batch):
+        compute_dtype = jnp.dtype(cfg.compute_dtype)
+        enc_out = ed.encode(cfg, params, batch["src_frames"])
+        B, L = batch["tgt_tokens"].shape
+        y = _decode_embed(params, batch["tgt_tokens"], compute_dtype)
+        positions = _positions_for(cfg, B, L)
+        h, _ = ed.decode_stack(cfg, params, y, positions=positions,
+                               enc_out=enc_out)
+        logits = lm_mod.lm_logits(cfg, params, h)
+        loss = cross_entropy(logits, batch["labels"])
+        return loss, {"ce": loss}
+
+    def prefill_fn(params, batch):
+        """Encode source + score target prefix (teacher-forced prefill)."""
+        compute_dtype = jnp.dtype(cfg.compute_dtype)
+        enc_out = ed.encode(cfg, params, batch["src_frames"])
+        B, L = batch["tgt_tokens"].shape
+        y = _decode_embed(params, batch["tgt_tokens"], compute_dtype)
+        positions = _positions_for(cfg, B, L)
+        h, _ = ed.decode_stack(cfg, params, y, positions=positions,
+                               enc_out=enc_out)
+        return lm_mod.lm_logits(cfg, params, h)
+
+    def decode_fn(params, cache, batch):
+        compute_dtype = jnp.dtype(cfg.compute_dtype)
+        tok = batch["tokens"]
+        B = tok.shape[0]
+        y = _decode_embed(params, tok, compute_dtype)
+        positions = _positions_for(cfg, B, 1, start=batch["length"])
+        h, cache = ed.decode_stack(cfg, params, y, positions=positions,
+                                   enc_out=None, caches=cache)
+        return lm_mod.lm_logits(cfg, params, h), cache
+
+    def init_cache(batch: int, max_len: int, dtype=jnp.bfloat16,
+                   src_len: int | None = None):
+        return ed.init_encdec_cache(cfg, batch, max_len,
+                                    src_len or max_len, dtype)
+
+    def input_specs(kind: str, seq_len: int, global_batch: int):
+        frames = jax.ShapeDtypeStruct((global_batch, seq_len, cfg.d_model),
+                                      jnp.float32)
+        tok = jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)
+        if kind == "train":
+            return {"src_frames": frames, "tgt_tokens": tok, "labels": tok}
+        if kind == "prefill":
+            return {"src_frames": frames, "tgt_tokens": tok}
+        batch = {"tokens": jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),
+                 "length": jax.ShapeDtypeStruct((), jnp.int32)}
+        cache = jax.eval_shape(
+            lambda: init_cache(global_batch, seq_len, src_len=seq_len))
+        return batch, cache
+
+    return Model(cfg, spec, loss_fn, prefill_fn, decode_fn, init_cache,
+                 input_specs)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return _build_encdec(cfg)
+    return _build_lm(cfg)

@@ -1,0 +1,8 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adamw,
+    make_optimizer,
+    pulse_sgd,
+    sgd,
+)
+from repro.optim.schedule import cosine_schedule, linear_warmup  # noqa: F401

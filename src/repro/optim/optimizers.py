@@ -1,0 +1,109 @@
+"""Optimizers: AdamW, momentum SGD, and the paper's pulse-quantized SGD.
+
+Minimal optax-like API (no optax offline):
+  opt = adamw(lr=...); state = opt.init(params)
+  params, state = opt.update(grads, state, params, step=...)
+
+``pulse_sgd`` is the paper's training circuit as an optimizer (C5): the
+applied update is discretized into a finite number of unit pulses and
+conductance-pair parameters are clipped into their representable range
+after every step — the online-learning constraint that distinguishes the
+hardware from float SGD (impact quantified in benchmarks/bench_constraints).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+    name: str = "opt"
+
+
+def _tree_zeros(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def sgd(lr: float | Callable[[int], float], momentum: float = 0.9,
+        weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": _tree_zeros(params)} if momentum else {}
+
+    def update(grads, state, params, step: int = 0):
+        lr_t = lr(step) if callable(lr) else lr
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+            new = jax.tree.map(lambda p, m: p - lr_t * m, params, mu)
+            return new, {"mu": mu}
+        return jax.tree.map(lambda p, g: p - lr_t * g, params, grads), state
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(lr: float | Callable[[int], float], b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"m": _tree_zeros(params), "v": _tree_zeros(params)}
+
+    def update(grads, state, params, step: int = 0):
+        lr_t = lr(step) if callable(lr) else lr
+        t = step + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p
+            return p - lr_t * u
+
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def pulse_sgd(lr: float | Callable[[int], float], *, max_update: float = 0.05,
+              levels: int = 128, w_max: float = 4.0) -> Optimizer:
+    """Paper C5: pulse-discretized update + conductance clipping.
+
+    Conductance-pair leaves (paths containing ``g_plus``/``g_minus``) are
+    clipped to [0, w_max] after the update; other leaves get the same
+    discretized-SGD treatment without clipping.
+    """
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step: int = 0,
+               rng: jax.Array | None = None):
+        lr_t = lr(step) if callable(lr) else lr
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        gflat = jax.tree.leaves(grads)
+        out = []
+        for (path, p), g in zip(flat, gflat):
+            dw = q.pulse_discretize(-lr_t * g, max_update, levels, rng)
+            pnew = p + dw
+            names = [getattr(k, "key", "") for k in path]
+            if any(n in ("g_plus", "g_minus") for n in names):
+                pnew = jnp.clip(pnew, 0.0, w_max)
+            out.append(pnew)
+        return jax.tree_util.tree_unflatten(treedef, out), state
+
+    return Optimizer(init, update, "pulse_sgd")
+
+
+def make_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"sgd": sgd, "adamw": adamw, "pulse_sgd": pulse_sgd}[name](lr, **kw)

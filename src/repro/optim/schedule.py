@@ -1,0 +1,21 @@
+"""Learning-rate schedules (pure functions of the integer step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def lr(step):
+        return base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    return lr
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def lr(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        prog = jnp.clip((step - warmup_steps) /
+                        max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr

@@ -1,0 +1,8 @@
+from repro.runtime.train_loop import Trainer, TrainState, make_train_step  # noqa: F401
+from repro.runtime.serve_loop import BatchedServer  # noqa: F401
+from repro.runtime import checkpoint  # noqa: F401
+from repro.runtime.faults import (  # noqa: F401
+    FaultInjector,
+    SimulatedPreemption,
+    StragglerWatchdog,
+)

@@ -1,0 +1,58 @@
+"""Fault-tolerance primitives: preemption simulation, straggler watchdog.
+
+On real pods these hooks bind to the cluster scheduler; in this container
+they are exercised by the tests (kill/restore bitwise-identical resume) and
+by the train loop's per-step watchdog.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+class SimulatedPreemption(Exception):
+    """Raised by the train loop when a fault injector fires."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministically preempt at a given step (tests/examples)."""
+    preempt_at_step: int | None = None
+
+    def check(self, step: int) -> None:
+        if self.preempt_at_step is not None and step == self.preempt_at_step:
+            raise SimulatedPreemption(f"simulated preemption at step {step}")
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags steps slower than ``threshold`` x the running median.
+
+    At pod scale the mitigation is re-slotting the slow host; here the hook
+    records the event so the loop (and tests) can observe it.  The paper's
+    static routing makes per-step time deterministic — any straggle is a
+    hardware fault, which is exactly what this detects.
+    """
+    threshold: float = 3.0
+    window: int = 32
+    _times: list[float] = dataclasses.field(default_factory=list)
+    events: list[tuple[int, float, float]] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self._times.append(dt)
+        self._times = self._times[-self.window:]
+        med = sorted(self._times)[len(self._times) // 2]
+        if len(self._times) >= 8 and dt > self.threshold * med:
+            self.events.append((step, dt, med))
+            return True
+        return False
+
+
+class StepTimer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.dt = time.perf_counter() - self.t0
+        return False

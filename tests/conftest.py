@@ -1,0 +1,29 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a fresh process with N fake devices.
+
+    Multi-device tests must fork: jax locks the device count on first init.
+    """
+    env = dict(os.environ,
+               PYTHONPATH=SRC,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    p = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=REPO)
+    if p.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={p.returncode}):\n{p.stdout}\n{p.stderr}")
+    return p.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

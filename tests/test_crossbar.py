@@ -1,0 +1,115 @@
+"""The paper's crossbar layer: decomposition, tiling, training rule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import crossbar as xb
+from repro.core.crossbar import CrossbarSpec
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+FLOAT = CrossbarSpec(transport_quant=False, error_quant=False,
+                     update_quant=False)
+
+
+@given(st.lists(st.floats(-1, 1, width=32), min_size=4, max_size=40))
+def test_decompose_reconstruct_roundtrip(ws):
+    w = jnp.asarray(ws, jnp.float32)
+    spec = CrossbarSpec(w_max=1.0)
+    gp, gm = xb.decompose(w, spec)
+    assert np.allclose(np.asarray(xb.reconstruct(gp, gm)), np.asarray(w),
+                       atol=1e-6)
+    assert float(gp.min()) >= 0 and float(gm.min()) >= 0
+    assert float(gp.max()) <= spec.w_max and float(gm.max()) <= spec.w_max
+
+
+def test_exact_tiling_equals_unsplit_matmul():
+    """Fan-in splitting with linear aggregation == the unsplit matmul
+    (Fig. 14 with exact aggregation) — the invariant the TP sharding of
+    large layers relies on."""
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    spec = CrossbarSpec(rows=100, cols=30, transport_quant=False,
+                        split_activation=False)
+    params = xb.init_conductances(k1, 350, 60, spec)
+    x = jax.random.normal(k2, (8, 350)) * 0.2
+    # the layer matmul (implicit tiling)
+    y = xb.crossbar_apply(params, x, spec, activation=False)
+    # explicit tile-by-tile accumulation
+    w = xb.reconstruct(params["g_plus"], params["g_minus"])
+    acc = jnp.zeros((8, 60))
+    for r0 in range(0, 350, 100):
+        acc = acc + x[:, r0:r0+100] @ w[r0:r0+100]
+    assert np.allclose(np.asarray(y), np.asarray(acc), atol=1e-4)
+
+
+def test_split_activation_mode_differs_and_is_bounded():
+    """Paper-faithful Fig.14 mode puts h() on sub-neurons: different
+    function, outputs still in h range."""
+    key = jax.random.PRNGKey(1)
+    spec_split = CrossbarSpec(rows=100, cols=30, split_activation=True,
+                              transport_quant=False)
+    spec_exact = CrossbarSpec(rows=100, cols=30, split_activation=False,
+                              transport_quant=False)
+    params = xb.init_conductances(key, 250, 20, spec_split)
+    x = jax.random.normal(key, (4, 250)) * 0.3
+    y_split = xb.crossbar_apply(params, x, spec_split)
+    y_exact = xb.crossbar_apply(params, x, spec_exact)
+    assert y_split.shape == y_exact.shape == (4, 20)
+    assert float(jnp.abs(y_split).max()) <= 0.5 + 1e-6
+
+
+def test_hard_sigmoid_matches_paper_eq3():
+    x = jnp.linspace(-4, 4, 101)
+    h = xb.hard_sigmoid(x)
+    expected = np.clip(np.asarray(x) * 0.25, -0.5, 0.5)
+    assert np.allclose(np.asarray(h), expected)
+    # h approximates sigmoid(x) - 0.5 (Fig. 6): max gap is small
+    gap = np.abs(expected - (1 / (1 + np.exp(-np.asarray(x))) - 0.5))
+    assert gap.max() < 0.12
+
+
+def test_paper_backprop_reduces_error():
+    """One hundred stochastic-BP steps on a toy mapping reduce output error
+    (paper section VI.A behaviour), under full constraints."""
+    key = jax.random.PRNGKey(2)
+    spec = CrossbarSpec(adc_bits=3, err_bits=8, update_quant=True,
+                        max_update=0.02)
+    k1, k2, k3 = jax.random.split(key, 3)
+    layers = [xb.init_conductances(k1, 4, 10, spec),
+              xb.init_conductances(k2, 10, 2, spec)]
+    x = jax.random.uniform(k3, (64, 4), minval=-0.5, maxval=0.5)
+    target = jnp.stack([0.4 * jnp.sign(x[:, 0] * x[:, 1]),
+                        -0.4 * jnp.sign(x[:, 2])], axis=1) * 0.5 + 0.0
+
+    def err(layers):
+        out = xb.mlp_forward(layers, x, spec)
+        return float(jnp.mean((target - out) ** 2))
+
+    e0 = err(layers)
+    for i in range(150):
+        layers, _ = xb.paper_backprop_step(layers, x, target, spec, lr=1.0)
+    e1 = err(layers)
+    assert e1 < e0 * 0.8, (e0, e1)
+    # conductances stay in the representable range at all times
+    for p in layers:
+        assert float(p["g_plus"].min()) >= 0
+        assert float(p["g_plus"].max()) <= spec.w_max + 1e-6
+
+
+def test_conductance_clipping_respected_after_updates():
+    key = jax.random.PRNGKey(3)
+    spec = CrossbarSpec(max_update=1.0, update_levels=4)
+    layers = [xb.init_conductances(key, 6, 3, spec)]
+    x = jnp.ones((4, 6)) * 0.5
+    t = jnp.ones((4, 3)) * 0.5
+    for _ in range(20):
+        layers, _ = xb.paper_backprop_step(layers, x, t, spec, lr=10.0)
+    p = layers[0]
+    assert float(p["g_plus"].min()) >= -1e-6
+    assert float(p["g_plus"].max()) <= spec.w_max + 1e-6
+    assert float(p["g_minus"].min()) >= -1e-6
+    assert float(p["g_minus"].max()) <= spec.w_max + 1e-6

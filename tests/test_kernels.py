@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [(8, 4, 3), (16, 100, 50), (128, 700, 260), (64, 512, 128),
+          (32, 1024, 256), (8, 401, 101)]   # incl. the paper's 400x100 + bias
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_crossbar_fwd_matches_ref(shape, dtype):
+    M, K, N = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = (jax.random.normal(k1, (M, K)) * 0.3).astype(dtype)
+    gp = jax.random.uniform(k2, (K, N)).astype(dtype)
+    gm = jax.random.uniform(k3, (K, N)).astype(dtype)
+    y = ops.crossbar_fwd(x, gp, gm)
+    yr = ref.crossbar_fwd_ref(x, gp, gm)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_crossbar_fwd_no_activation(shape):
+    M, K, N = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = jax.random.normal(k1, (M, K)) * 0.3
+    gp = jax.random.uniform(k2, (K, N))
+    gm = jax.random.uniform(k3, (K, N))
+    y = ops.crossbar_fwd(x, gp, gm, activation=False)
+    yr = ref.crossbar_fwd_ref(x, gp, gm, activation=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_crossbar_bwd_matches_ref(shape, dtype):
+    M, K, N = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    dy = (jax.random.normal(k1, (M, N)) * 0.1).astype(dtype)
+    gp = jax.random.uniform(k2, (K, N)).astype(dtype)
+    gm = jax.random.uniform(k3, (K, N)).astype(dtype)
+    dx = ops.crossbar_bwd(dy, gp, gm)
+    dxr = ref.crossbar_bwd_ref(dy, gp, gm)
+    tol = 1e-4 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dxr),
+                               atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_pulse_update_matches_ref(shape):
+    M, K, N = shape
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(k1, (M, K)) * 0.2
+    d = jax.random.normal(k2, (M, N)) * 0.1
+    gp = jax.random.uniform(k3, (K, N))
+    gm = jax.random.uniform(k4, (K, N))
+    got = ops.pulse_update(gp, gm, x, d, lr=0.01, w_max=1.0)
+    want = ref.pulse_update_ref(gp, gm, x, d, lr=0.01, max_dw=0.05,
+                                levels=128, w_max=1.0)
+    # tolerance = one pulse unit (round-at-boundary may differ by one level)
+    unit = 0.05 / 128
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=unit + 1e-6)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 4, 3), (1000, 20, 7), (256, 32, 32),
+                                   (513, 10, 5)])
+def test_kmeans_assign_matches_ref(n, d, k):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(4))
+    x = jax.random.normal(k1, (n, d))
+    c = jax.random.normal(k2, (k, d))
+    a = ops.kmeans_assign(x, c)
+    ar = ref.kmeans_assign_ref(x, c)
+    assert np.array_equal(np.asarray(a), np.asarray(ar))
+
+
+def test_kernel_tiling_invariance():
+    """Different block sizes must give identical results (tiling is an
+    implementation detail, paper section V.B)."""
+    from repro.kernels.crossbar import crossbar_fwd_kernel
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(5), 3)
+    x = jax.random.normal(k1, (64, 256)) * 0.3
+    gp = jax.random.uniform(k2, (256, 64))
+    gm = jax.random.uniform(k3, (256, 64))
+    y1 = crossbar_fwd_kernel(x, gp, gm, bm=16, bk=64, bn=32, interpret=True)
+    y2 = crossbar_fwd_kernel(x, gp, gm, bm=64, bk=256, bn=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,K,hd,causal", [
+    (2, 64, 4, 2, 16, True), (1, 128, 2, 1, 32, True),
+    (2, 64, 4, 4, 16, False), (1, 256, 2, 2, 64, True)])
+def test_flash_attention_matches_ref(B, S, H, K, hd, causal):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(kq, (B, S, H, hd))
+    k = jax.random.normal(kk, (B, S, K, hd))
+    v = jax.random.normal(kv, (B, S, K, hd))
+    o = ops.flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(kq, (1, 128, 2, 32)).astype(dtype)
+    k = jax.random.normal(kk, (1, 128, 2, 32)).astype(dtype)
+    v = jax.random.normal(kv, (1, 128, 2, 32)).astype(dtype)
+    o = ops.flash_attention(q, k, v, causal=True)
+    want = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=5e-2, rtol=5e-2)

@@ -1,0 +1,180 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness assertions (assignment requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, get_reduced_config, list_archs
+from repro.data.pipeline import TokenStream
+from repro.models import build_model
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B=2, S=64):
+    ts = TokenStream(cfg.vocab_size, S, B, seed=1)
+    batch = ts.batch_at(0)
+    if cfg.family == "encdec":
+        return {"src_frames": jnp.ones((B, S, cfg.d_model), jnp.float32),
+                "tgt_tokens": batch["tokens"], "labels": batch["labels"]}
+    if cfg.vlm_patches:
+        return dict(batch, patch_embeds=jnp.ones(
+            (B, cfg.vlm_patches, cfg.d_model), jnp.float32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), arch
+    # one SGD step moves the loss
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    assert all(bool(jnp.isfinite(g).all()) for g in jax.tree.leaves(grads))
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2, _ = jax.jit(model.loss_fn)(params2, batch)
+    assert float(loss2) < float(loss), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_logits_shape(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    if cfg.family == "encdec":
+        batch = {"src_frames": batch["src_frames"],
+                 "tgt_tokens": batch["tgt_tokens"]}
+    else:
+        batch = {k: v for k, v in batch.items() if k != "labels"}
+    logits = jax.jit(model.prefill_fn)(params, batch)
+    assert logits.shape == (2, 64, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_steps(arch):
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, MAX = 2, 32
+    if cfg.family == "encdec":
+        from repro.models import encdec as ed
+        cache = model.init_cache(B, MAX, src_len=8)
+        enc_out = ed.encode(cfg, params, jnp.ones((B, 8, cfg.d_model)))
+        cache["cross"] = ed.fill_cross_cache(cfg, params, enc_out)
+    else:
+        cache = model.init_cache(B, MAX)
+    dfn = jax.jit(model.decode_fn)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    for step in range(4):
+        logits, cache = dfn(params, cache,
+                            {"tokens": tok, "length": jnp.int32(step)})
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        assert bool(jnp.isfinite(logits).all()), arch
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+
+
+def test_full_configs_match_assignment_sheet():
+    """The full (non-reduced) configs carry the exact assigned dimensions."""
+    sheet = {
+        "mamba2-130m": dict(n_layers=24, d_model=768, vocab_size=50280,
+                            ssm_state=128),
+        "recurrentgemma-9b": dict(n_layers=38, d_model=4096, n_heads=16,
+                                  n_kv_heads=1, d_ff=12288, vocab_size=256000),
+        "moonshot-v1-16b-a3b": dict(n_layers=48, d_model=2048, n_heads=16,
+                                    n_kv_heads=16, d_expert=1408,
+                                    vocab_size=163840, n_experts=64, top_k=6),
+        "qwen3-moe-30b-a3b": dict(n_layers=48, d_model=2048, n_heads=32,
+                                  n_kv_heads=4, d_expert=768,
+                                  vocab_size=151936, n_experts=128, top_k=8),
+        "seamless-m4t-medium": dict(n_layers=12, d_model=1024, n_heads=16,
+                                    n_kv_heads=16, d_ff=4096,
+                                    vocab_size=256206, encoder_layers=12),
+        "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab_size=131072),
+        "yi-6b": dict(n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+                      d_ff=11008, vocab_size=64000),
+        "qwen1.5-110b": dict(n_layers=80, d_model=8192, n_heads=64,
+                             n_kv_heads=8, d_ff=49152, vocab_size=152064,
+                             qkv_bias=True),
+        "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14,
+                           n_kv_heads=2, d_ff=4864, vocab_size=151936,
+                           qkv_bias=True),
+        "qwen2-vl-72b": dict(n_layers=80, d_model=8192, n_heads=64,
+                             n_kv_heads=8, d_ff=29568, vocab_size=152064),
+    }
+    for arch, expect in sheet.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_long_500k_capability_flags():
+    """Sub-quadratic archs run long_500k; full-attention archs skip."""
+    from repro.configs import shape_applicable
+    runs = {a: shape_applicable(get_config(a), "long_500k")[0] for a in ARCHS}
+    assert runs["mamba2-130m"] and runs["recurrentgemma-9b"]
+    assert sum(runs.values()) == 2
+
+
+def test_crossbar_mode_param_doubling():
+    """Crossbar mode stores differential pairs: ~2x projection params
+    (two memristors per synapse, paper section III.B)."""
+    cfg = get_reduced_config("yi-6b")
+    n_std = build_model(cfg).cfg.param_count()
+    n_xb = build_model(cfg.replace(crossbar=True)).cfg.param_count()
+    assert n_xb > 1.5 * n_std
+
+
+def test_int8_kv_cache_close_to_bf16():
+    """Quantized KV cache (paper C3/C4 on decode memory) stays within a few
+    percent of the bf16 cache on decode logits."""
+    cfg = get_reduced_config("yi-6b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    outs = {}
+    for dt in ("bfloat16", "int8"):
+        m2 = build_model(cfg.replace(kv_cache_dtype=dt))
+        cache = m2.init_cache(2, 32)
+        dfn = jax.jit(m2.decode_fn)
+        tok = jnp.ones((2, 1), jnp.int32)
+        logs = []
+        for step in range(5):
+            logits, cache = dfn(params, cache,
+                                {"tokens": tok, "length": jnp.int32(step)})
+            tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+            logs.append(logits)
+        outs[dt] = jnp.stack(logs)
+    diff = float(jnp.abs(outs["bfloat16"] - outs["int8"]).max())
+    rng = float(jnp.abs(outs["bfloat16"]).max())
+    assert diff / rng < 0.05, (diff, rng)
+    # and the int8 cache really is smaller
+    c8 = build_model(cfg.replace(kv_cache_dtype="int8")).init_cache(2, 32)
+    cb = model.init_cache(2, 32)
+    bytes8 = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(c8))
+    bytesb = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cb))
+    assert bytes8 < 0.62 * bytesb
+
+
+def test_crossbar_wire_mode_trains():
+    """(w, common-mode) reparametrization (EXPERIMENTS §Perf D): same
+    quantized-transport semantics, single weight tensor — must train."""
+    cfg = get_reduced_config("yi-6b", crossbar=True, xbar_paired=False)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, _ = jax.jit(model.loss_fn)(params, batch)
+    grads = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g, params, grads)
+    loss2, _ = jax.jit(model.loss_fn)(params2, batch)
+    assert float(loss2) < float(loss)
+    # ~half the projection params of the paired representation
+    n_paired = build_model(
+        get_reduced_config("yi-6b", crossbar=True)).cfg.param_count()
+    assert cfg.param_count() < 0.7 * n_paired

@@ -1,0 +1,78 @@
+"""Property tests for the paper's transport quantizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as q
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+floats = st.lists(st.floats(-10, 10, allow_nan=False, width=32),
+                  min_size=1, max_size=64)
+
+
+@given(floats, st.integers(2, 8))
+def test_adc_quantize_in_range_and_on_grid(xs, bits):
+    x = jnp.asarray(xs, jnp.float32)
+    y = q.adc_quantize(x, bits)
+    assert float(jnp.abs(y).max()) <= q.ACT_RANGE + 1e-6
+    # on-grid: values are multiples of the step from -ACT_RANGE
+    levels = 2 ** bits - 1
+    step = 2 * q.ACT_RANGE / levels
+    k = (np.asarray(y) + q.ACT_RANGE) / step
+    assert np.allclose(k, np.round(k), atol=1e-4)
+
+
+@given(floats, st.integers(2, 8))
+def test_adc_quantize_error_bound(xs, bits):
+    x = jnp.clip(jnp.asarray(xs, jnp.float32), -q.ACT_RANGE, q.ACT_RANGE)
+    y = q.adc_quantize(x, bits)
+    step = 2 * q.ACT_RANGE / (2 ** bits - 1)
+    assert float(jnp.abs(y - x).max()) <= step / 2 + 1e-6
+
+
+@given(floats, st.integers(2, 16))
+def test_error_quantize_roundtrip_bound(xs, bits):
+    x = jnp.asarray(xs, jnp.float32)
+    qt = q.error_quantize(x, bits)
+    y = qt.dequantize()
+    maxmag = 2 ** (bits - 1) - 1
+    bound = float(jnp.max(jnp.abs(x))) / maxmag
+    assert float(jnp.abs(y - x).max()) <= bound / 2 + 1e-6
+    assert int(jnp.abs(qt.codes).max()) <= maxmag
+
+
+@given(floats)
+def test_error_quantize_preserves_sign(xs):
+    x = jnp.asarray(xs, jnp.float32)
+    y = q.error_quantize(x, 8).dequantize()
+    assert bool(jnp.all((y == 0) | (jnp.sign(y) == jnp.sign(x))))
+
+
+def test_stochastic_rounding_unbiased():
+    x = jnp.full((2048,), 0.37)
+    keys = jax.random.split(jax.random.PRNGKey(0), 64)
+    outs = jnp.stack([q.error_quantize(x, 4, key=k).dequantize()
+                      for k in keys])
+    # E[quantized] == x for stochastic rounding
+    assert abs(float(outs.mean()) - 0.37) < 0.01
+
+
+def test_ste_gradient_is_identity():
+    g = jax.grad(lambda x: q.adc_quantize_ste(x, 3).sum())(jnp.linspace(-.4, .4, 16))
+    assert np.allclose(np.asarray(g), 1.0)
+    g2 = jax.grad(lambda x: q.error_quantize_ste(x, 8).sum())(jnp.linspace(-2, 2, 16))
+    assert np.allclose(np.asarray(g2), 1.0)
+
+
+@given(floats, st.integers(8, 256))
+def test_pulse_discretize_grid_and_bound(xs, levels):
+    dw = jnp.asarray(xs, jnp.float32) * 0.01
+    out = q.pulse_discretize(dw, max_dw=0.05, levels=levels)
+    unit = 0.05 / levels
+    k = np.asarray(out) / unit
+    assert np.allclose(k, np.round(k), atol=1e-3)
+    assert float(jnp.abs(out).max()) <= 0.05 + 1e-6

@@ -1,0 +1,82 @@
+"""Unit tests for the roofline HLO parser and term arithmetic."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import roofline as rl
+
+HLO = """
+ENTRY %main {
+  %ag = f32[16,4096,896]{2,1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={2}
+  %ar = bf16[1024]{0} all-reduce(%y), replica_groups=[1,256]<=[256], to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%z), replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %a2a = (f32[8,16]{1,0}, f32[8,16]{1,0}) all-to-all(%u, %w), replica_groups=[32,8]<=[256]
+  %cp = s8[128]{0} collective-permute(%v), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_bytes_parsing():
+    out = rl.collective_bytes(HLO, 256)
+    ag = 16 * 4096 * 896 * 4 * 15 / 16
+    ar = 1024 * 2 * 2 * 255 / 256
+    rs = 64 * 32 * 4 * 15
+    a2a = 2 * 8 * 16 * 4 * 7 / 8
+    cp = 128 * 1
+    assert out["all-gather"] == pytest.approx(ag)
+    assert out["all-reduce"] == pytest.approx(ar)
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    assert out["all-to-all"] == pytest.approx(a2a)
+    assert out["collective-permute"] == pytest.approx(cp)
+    assert out["total"] == pytest.approx(ag + ar + rs + a2a + cp)
+
+
+def test_group_size_variants():
+    # old-style replica_groups={{0,1},{2,3}} -> group size 2
+    line = "%ar = f32[4]{0} all-reduce(%x), replica_groups={{0,1},{2,3}}"
+    out = rl.collective_bytes(line, 4)
+    assert out["all-reduce"] == pytest.approx(4 * 4 * 2 * 1 / 2)
+    # group size 1 -> no wire traffic
+    line1 = "%ar = f32[4]{0} all-reduce(%x), replica_groups=[4,1]<=[4]"
+    assert rl.collective_bytes(line1, 4)["total"] == 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = rl.Roofline(flops_per_dev=197e12, bytes_per_dev=819e9 * 2,
+                    coll_bytes_per_dev=50e9 * 0.5, coll_breakdown={},
+                    n_devices=256, model_flops=197e12 * 256 * 0.5)
+    assert r.t_compute == pytest.approx(1.0)
+    assert r.t_memory == pytest.approx(2.0)
+    assert r.t_collective == pytest.approx(0.5)
+    assert r.bottleneck == "memory"
+    assert r.t_bound == pytest.approx(2.0)
+    assert r.mfu_bound == pytest.approx(0.25)
+    assert r.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_inner_loop_flops_paths():
+    from repro.configs import get_config
+    cfg = get_config("yi-6b")
+    # dense grid scanned: correction > 0 for train
+    f_train = rl.inner_loop_flops(cfg, "train", 4096, 256)
+    assert f_train > 0
+    # decode: no inner loops
+    assert rl.inner_loop_flops(cfg, "decode", 32768, 128) == 0
+    # triangular unrolled (nq=8 <= 12): no correction
+    cfg_skip = cfg.replace(skip_masked_blocks=True)
+    assert rl.inner_loop_flops(cfg_skip, "train", 4096, 256) == 0
+    # paired scanned (nq=64): half the dense-grid correction
+    f_pref = rl.inner_loop_flops(cfg, "prefill", 32768, 32)
+    f_pair = rl.inner_loop_flops(cfg_skip, "prefill", 32768, 32)
+    assert 0.4 < f_pair / f_pref < 0.6
+
+
+def test_model_flops_estimates():
+    from repro.configs import get_config
+    dense = get_config("yi-6b")
+    moe = get_config("qwen3-moe-30b-a3b")
+    assert rl.model_flops_estimate(dense, "train", 4096, 256) == \
+        6.0 * dense.active_param_count() * 4096 * 256
+    # MoE active < total
+    assert moe.active_param_count() < 0.25 * moe.param_count()
