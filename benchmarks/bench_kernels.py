@@ -58,6 +58,71 @@ def main():
     row("kernel.kmeans_assign.interp_us", us,
         f"v5e_roofline_us={_roofline_us(flops, bytes_):.2f}")
 
+    _training_path_benches()
+
+
+def _training_path_benches():
+    """The differentiable kernel path + the scan-vs-loop training pipeline
+    (the PR's acceptance metric: the jitted scan pipeline must beat the
+    legacy Python loop; both are recorded)."""
+    from repro.core import crossbar as xb
+    from repro.core.crossbar import CrossbarSpec
+
+    # -- grad through the custom_vjp kernel path vs the reference path
+    spec = CrossbarSpec(transport_quant=False, error_quant=True,
+                        update_quant=False)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    M, K, N = 128, 512, 128
+    x = jax.random.normal(k1, (M, K)) * 0.3
+    p = xb.init_conductances(k2, K, N, spec)
+    r = jax.random.normal(k3, (M, N))
+
+    def make_loss(use_kernel):
+        def loss(params, x):
+            y = xb.crossbar_apply(params, x, spec, use_kernel=use_kernel)
+            return jnp.sum(y * r)
+        return jax.jit(jax.grad(loss))
+
+    for name, fn in (("kernel", make_loss(True)), ("ref", make_loss(False))):
+        us = time_call(fn, p, x, iters=3)
+        row(f"train.crossbar_grad.{name}.interp_us", us,
+            f"M={M},K={K},N={N},err_quant=True")
+
+    # -- paper stochastic-BP step: legacy Python loop vs jitted lax.scan
+    spec = CrossbarSpec(adc_bits=3, err_bits=8, transport_quant=True,
+                        error_quant=True, update_quant=True)
+    D, L, B = 64, 4, 32
+    layers = [xb.init_conductances(jax.random.fold_in(k1, i), D, D, spec)
+              for i in range(L)]
+    xt = jax.random.uniform(k2, (B, D), minval=-0.5, maxval=0.5)
+    tt = jax.random.uniform(k3, (B, D), minval=-0.5, maxval=0.5)
+
+    def loop_step():
+        out, _ = xb.paper_backprop_step([dict(q) for q in layers], xt, tt,
+                                        spec, 0.5)
+        return out[0]["g_plus"]
+
+    us_loop = time_call(loop_step, iters=3)
+    row("train.paper_bp.python_loop.us", us_loop, f"L={L},D={D},B={B}")
+
+    for uk, name in ((True, "scan_kernel"), (False, "scan_ref")):
+        def scan_step(uk=uk):
+            st, _ = xb.paper_backprop_step_scan(xb.stack_layers(layers),
+                                                xt, tt, spec, 0.5, uk)
+            return st["g_plus"]
+
+        us_scan = time_call(scan_step, iters=3)
+        row(f"train.paper_bp.{name}.us", us_scan,
+            f"L={L},D={D},B={B},speedup_vs_loop={us_loop / us_scan:.2f}x")
+
+    # -- fused inference path (activation + output-ADC in the epilogue)
+    fwd_fused = lambda: xb.mlp_forward(layers, xt, spec, use_kernel=True)
+    fwd_ref = lambda: xb.mlp_forward(layers, xt, spec)
+    row("infer.mlp_fused_epilogue.us", time_call(fwd_fused, iters=3),
+        f"L={L},D={D},B={B}")
+    row("infer.mlp_reference.us", time_call(fwd_ref, iters=3),
+        f"L={L},D={D},B={B}")
+
 
 if __name__ == "__main__":
     main()

@@ -19,7 +19,20 @@ def time_call(fn, *args, iters: int = 10, warmup: int = 2, **kw) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
+ROWS: list[dict] = []
+
+
 def row(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line)
+    ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+                 "derived": derived})
     return line
+
+
+def drain_rows() -> list[dict]:
+    """Return and clear the rows collected since the last drain (used by
+    benchmarks/run.py to emit per-suite BENCH_*.json records)."""
+    out = list(ROWS)
+    ROWS.clear()
+    return out

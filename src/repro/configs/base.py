@@ -75,6 +75,7 @@ class ModelConfig:
     xbar_err_bits: int = 8
     xbar_w_max: float = 4.0
     xbar_paired: bool = True                     # literal (G+,G-) vs (w,c)
+    xbar_use_kernel: bool = False                # fused Pallas crossbar path
     remat: str = "full"                          # none | full | dots
     q_chunk: int = 512
     kv_chunk: int = 512

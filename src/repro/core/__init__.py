@@ -16,6 +16,9 @@ from repro.core.crossbar import (  # noqa: F401
     init_conductances,
     mlp_forward,
     paper_backprop_step,
+    paper_backprop_step_scan,
+    stack_layers,
+    unstack_layers,
 )
 from repro.core.quantization import (  # noqa: F401
     QTensor,

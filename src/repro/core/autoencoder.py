@@ -83,6 +83,8 @@ def pretrain_stack(key: jax.Array, x: jax.Array, dims: list[int],
     """
     enc_layers: list[dict] = []
     curves: list[jax.Array] = []
+    # Invariant: repr_x is exactly what the next core receives — the raw
+    # DAC-driven input at level 0, transport-quantized activations after.
     repr_x = x
     keys = jax.random.split(key, len(dims) - 1)
     for k, (fi, h) in zip(keys, zip(dims, dims[1:])):
@@ -90,7 +92,9 @@ def pretrain_stack(key: jax.Array, x: jax.Array, dims: list[int],
             k, repr_x, fi, h, spec, lr=lr, epochs=epochs, batch=batch)
         enc_layers.append(enc)
         curves.append(losses)
-        repr_x = xb.crossbar_apply(enc, repr_x, spec)
+        repr_x = xb.crossbar_apply(enc, repr_x, spec, transport_in=False)
+        if spec.transport_quant:   # the representation rides the network
+            repr_x = xb.q.adc_quantize_ste(repr_x, spec.adc_bits)
     return enc_layers, curves
 
 

@@ -146,7 +146,8 @@ _xbar_matmul.defvjp(_xbar_fwd, _xbar_bwd)
 
 def crossbar_apply(params: dict[str, jax.Array], x: jax.Array,
                    spec: CrossbarSpec, *, activation: bool = True,
-                   use_kernel: bool = False) -> jax.Array:
+                   use_kernel: bool = False,
+                   transport_in: bool = True) -> jax.Array:
     """Apply one crossbar layer: y = h( (ADC(x)) @ (g+ - g-) ).
 
     ``x``: (..., fan_in).  Tiling over fan-in/fan-out is implicit: the matmul
@@ -155,14 +156,29 @@ def crossbar_apply(params: dict[str, jax.Array], x: jax.Array,
     Pallas kernel path (kernels/crossbar.py) materializes the tiles
     explicitly with the same semantics; ``tests/test_kernels.py`` checks the
     two agree.  ``split_activation=True`` applies h() per fan-in tile first.
+
+    ``transport_in=False`` marks an input that did NOT ride the routing
+    network — the network's own input, driven through the DAC as an analog
+    voltage (section IV.A quantizes *neuron outputs*, not network inputs).
+
+    ``use_kernel=True`` routes through the differentiable fused Pallas path
+    (kernels/ops.crossbar_matmul): forward, error backprop (with in-kernel
+    8-bit dequant) and the weight outer product all run as kernels under
+    ``jax.grad``.
     """
     gp, gm = params["g_plus"], params["g_minus"]
     fan_in = gp.shape[0]
-    if spec.transport_quant:
+    if spec.transport_quant and transport_in:
         x = q.adc_quantize_ste(x, spec.adc_bits)
-    if use_kernel:
+    # Fig.-14 sub-neuron mode changes the network function per fan-in tile;
+    # the fused kernel implements exact aggregation only, so split stacks
+    # fall through to the reference path rather than silently computing a
+    # different model.
+    if use_kernel and not (spec.split_activation and fan_in > spec.rows):
         from repro.kernels import ops as kernel_ops
-        dp = kernel_ops.crossbar_fwd(x, gp, gm, spec)
+        dp = kernel_ops.crossbar_matmul(x, gp, gm,
+                                        error_quant=spec.error_quant,
+                                        err_bits=spec.err_bits)
         return hard_sigmoid(dp) if activation else dp
 
     if spec.split_activation and fan_in > spec.rows:
@@ -207,12 +223,15 @@ def paper_backprop_step(layers: list[dict[str, jax.Array]], x: jax.Array,
     reproduction.  (LM-scale training uses the autodiff path above instead.)
     Returns (updated_layers, output_error).
     """
-    # -- forward, recording per-layer inputs and DPs (III.F step 1)
+    # -- forward, recording per-layer inputs and DPs (III.F step 1).
+    # Layer 0's input is the network input: it arrives through the DAC as
+    # an analog voltage, so only *inter-core* activations see the 3-bit
+    # output ADC (section IV.A quantizes neuron outputs, not inputs).
     acts = [x]
     dps = []
     h = x
-    for p in layers:
-        if spec.transport_quant:
+    for li, p in enumerate(layers):
+        if spec.transport_quant and li > 0:
             h = q.adc_quantize_ste(h, spec.adc_bits)
             acts[-1] = h
         dp = h @ reconstruct(p["g_plus"], p["g_minus"])
@@ -245,8 +264,124 @@ def paper_backprop_step(layers: list[dict[str, jax.Array]], x: jax.Array,
 
 
 def mlp_forward(layers: list[dict[str, jax.Array]], x: jax.Array,
-                spec: CrossbarSpec) -> jax.Array:
+                spec: CrossbarSpec, *, use_kernel: bool = False) -> jax.Array:
+    """Stacked crossbar forward.  The network input skips the transport ADC
+    (DAC-driven, see crossbar_apply); inter-layer links are quantized.
+
+    ``use_kernel=True`` runs the fully-fused inference path: each layer is
+    one Pallas call with the hard-sigmoid *and* the output ADC in the
+    kernel epilogue, so inter-layer activations never round-trip through a
+    separate quantize op (DESIGN.md §2.3).
+    """
+    split = spec.split_activation and any(
+        p["g_plus"].shape[0] > spec.rows for p in layers)
+    if use_kernel and not split:   # sub-neuron stacks: reference path only
+        from repro.kernels import ops as kernel_ops
+        h = x
+        last = len(layers) - 1
+        for li, p in enumerate(layers):
+            bits = (spec.adc_bits
+                    if spec.transport_quant and li < last else None)
+            h = kernel_ops.crossbar_fwd(h, p["g_plus"], p["g_minus"],
+                                        activation=True, adc_bits=bits)
+        return h
     h = x
-    for p in layers:
-        h = crossbar_apply(p, h, spec)
+    for li, p in enumerate(layers):
+        h = crossbar_apply(p, h, spec, transport_in=(li > 0))
     return h
+
+
+# ---------------------------------------------------------------------------
+# Fused scan pipeline over stacked equal-shaped layers (the jitted hot loop)
+# ---------------------------------------------------------------------------
+
+def stack_layers(layers: list[dict[str, jax.Array]]) -> dict[str, jax.Array]:
+    """Stack equal-shaped layer dicts into (L, fan_in, fan_out) buffers for
+    the scan pipeline.  Raises if shapes are ragged (use the per-layer
+    ``paper_backprop_step`` for ragged stacks)."""
+    shapes = {tuple(p["g_plus"].shape) for p in layers}
+    if len(shapes) != 1:
+        raise ValueError(f"scan pipeline needs equal-shaped layers, got "
+                         f"{sorted(shapes)}")
+    return {"g_plus": jnp.stack([p["g_plus"] for p in layers]),
+            "g_minus": jnp.stack([p["g_minus"] for p in layers])}
+
+
+def unstack_layers(stacked: dict[str, jax.Array]) -> list[dict[str, jax.Array]]:
+    L = stacked["g_plus"].shape[0]
+    return [{"g_plus": stacked["g_plus"][i], "g_minus": stacked["g_minus"][i]}
+            for i in range(L)]
+
+
+@partial(jax.jit, static_argnames=("spec", "lr", "use_kernel"),
+         donate_argnums=(0,))
+def paper_backprop_step_scan(stacked: dict[str, jax.Array], x: jax.Array,
+                             target: jax.Array, spec: CrossbarSpec,
+                             lr: float, use_kernel: bool = True
+                             ) -> tuple[dict[str, jax.Array], jax.Array]:
+    """One stochastic-BP step as a jitted ``lax.scan`` pipeline.
+
+    Same semantics as :func:`paper_backprop_step` restricted to stacked
+    equal-shaped layers with deterministic pulse rounding, but the whole
+    step is one compiled graph: forward scan (recording per-layer inputs
+    and DPs), then a reversed scan whose body runs the Pallas bwd kernel
+    (error transpose-product) and the fused pulse-update kernel per layer.
+    The conductance buffers are donated, so steady-state training updates
+    G± in place instead of copying per-layer dicts every step.
+    """
+    from repro.kernels import ops as kernel_ops
+
+    batch = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    lr_eff = lr / batch
+
+    def matmul(h, p):
+        if use_kernel:
+            return kernel_ops.crossbar_fwd(h, p["g_plus"], p["g_minus"],
+                                           activation=False)
+        return h @ reconstruct(p["g_plus"], p["g_minus"])
+
+    def fwd_body(h, p):
+        dp = matmul(h, p)
+        out = hard_sigmoid(dp)
+        # transport-quantize at the core boundary; the *last* layer's output
+        # is consumed by the training unit, not the network, so the raw h
+        # is also emitted per layer.
+        carry = (q.adc_quantize_ste(out, spec.adc_bits)
+                 if spec.transport_quant else out)
+        return carry, (h, dp, out)
+
+    _, (acts, dps, outs) = jax.lax.scan(fwd_body, x, stacked)
+    out = outs[-1]
+    delta = target - out
+
+    def bwd_body(delta, xs):
+        p, a, dp = xs
+        if spec.error_quant:
+            delta = q.error_quantize(delta, spec.err_bits).dequantize()
+        local = delta * hard_sigmoid_deriv(dp)
+        if use_kernel:
+            if spec.update_quant:
+                gp, gm = kernel_ops.pulse_update(
+                    p["g_plus"], p["g_minus"], a, local, lr=lr_eff,
+                    max_dw=spec.max_update, levels=spec.update_levels,
+                    w_max=spec.w_max)
+            else:
+                # continuous (non-pulsed) update, outer product on-kernel
+                dw = 2.0 * lr_eff * kernel_ops.crossbar_dw(a, local)
+                gp = clip_conductance(p["g_plus"] + 0.5 * dw, spec)
+                gm = clip_conductance(p["g_minus"] - 0.5 * dw, spec)
+            delta_prev = kernel_ops.crossbar_bwd(local, p["g_plus"],
+                                                 p["g_minus"])
+        else:
+            dw = 2.0 * lr_eff * jnp.einsum("...i,...j->ij", a, local)
+            if spec.update_quant:
+                dw = q.pulse_discretize(dw, spec.max_update,
+                                        spec.update_levels, None)
+            gp = clip_conductance(p["g_plus"] + 0.5 * dw, spec)
+            gm = clip_conductance(p["g_minus"] - 0.5 * dw, spec)
+            delta_prev = local @ reconstruct(p["g_plus"], p["g_minus"]).T
+        return delta_prev, {"g_plus": gp, "g_minus": gm}
+
+    _, new_stacked = jax.lax.scan(bwd_body, delta, (stacked, acts, dps),
+                                  reverse=True)
+    return new_stacked, target - out

@@ -1,0 +1,62 @@
+"""Forward-compat shims for the pinned jax (0.4.x).
+
+The distribution tests (and newer call sites) use the jax 0.5+ spellings —
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``.  On the pinned jax these live under experimental names
+or do not exist; importing :mod:`repro.dist` installs equivalents so the
+same code runs on both.  Each shim is a no-op when the real API exists.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _install_shard_map() -> None:
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, /, *, mesh, in_specs, out_specs, check_vma: bool = True,
+                  **kw):
+        # 0.4.x spells check_vma as check_rep
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_vma, **kw)
+
+    jax.shard_map = shard_map
+
+
+def _install_axis_type() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+
+def _install_make_mesh_axis_types() -> None:
+    sig = inspect.signature(jax.make_mesh)
+    if "axis_types" in sig.parameters:
+        return
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        del axis_types  # 0.4.x meshes are implicitly Auto-typed
+        return _make_mesh(axis_shapes, axis_names, **kw)
+
+    jax.make_mesh = make_mesh
+
+
+def install() -> None:
+    _install_shard_map()
+    _install_axis_type()
+    _install_make_mesh_axis_types()

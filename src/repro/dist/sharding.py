@@ -1,0 +1,251 @@
+"""Logical-axis sharding: ParamSpec trees, rules, and activation constraints.
+
+Parameters are declared as :class:`ParamSpec` leaves — (shape, logical axes,
+initializer) — and every physical decision is deferred to a *rules* dict
+mapping logical axis names ("fsdp", "heads", "batch", ...) to mesh axes.
+``logical_to_pspec`` applies the rules with a divisibility fallback: a dim
+that does not divide over its assigned mesh axes silently drops to
+replicated (composite axes drop to the longest divisible prefix), so one
+spec tree serves every mesh shape from 1 device to the 512-chip dry run.
+
+Activation constraints (``shard_activation``) are no-ops outside an
+``activation_sharding(mesh, rules)`` context, so pure-CPU tests run the same
+model code with zero sharding machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec and initializers
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter: shape + logical axis names + initializer.
+
+    ``init(key, shape, dtype) -> Array``.  A leading ``"layers"`` logical
+    axis marks a stacked (scan-over-depth) parameter; ``init_params``
+    initializes each layer slice with an independent key.
+    """
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    init: Callable[[jax.Array, tuple[int, ...], Any], jax.Array]
+    dtype: Any = jnp.float32
+
+
+def zeros_init():
+    return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init():
+    return lambda key, shape, dtype: jnp.ones(shape, dtype)
+
+
+def normal_init(std: float):
+    return lambda key, shape, dtype: (
+        jax.random.normal(key, shape, dtype) * jnp.asarray(std, dtype))
+
+
+def fanin_init(axis: int):
+    """Normal(0, 1/fan_in) with fan_in read from ``shape[axis]``."""
+    def init(key, shape, dtype):
+        scale = jnp.asarray(shape[axis] ** -0.5, dtype)
+        return jax.random.normal(key, shape, dtype) * scale
+    return init
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _spec_leaves(tree):
+    return [l for l in jax.tree.leaves(tree, is_leaf=_is_spec) if _is_spec(l)]
+
+
+def stack_specs(tree, n: int):
+    """Stack a spec tree ``n`` times along a new leading "layers" axis."""
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + tuple(s.shape), ("layers",) + tuple(s.logical_axes),
+                         s.init, s.dtype)
+    return jax.tree.map(stack, tree, is_leaf=_is_spec)
+
+
+def param_count(tree) -> int:
+    return sum(math.prod(s.shape) for s in _spec_leaves(tree))
+
+
+def _init_leaf(key: jax.Array, s: ParamSpec) -> jax.Array:
+    if s.logical_axes and s.logical_axes[0] == "layers":
+        # stacked layers initialize independently (scan-over-depth semantics)
+        keys = jax.random.split(key, s.shape[0])
+        sub = ParamSpec(tuple(s.shape[1:]), tuple(s.logical_axes[1:]),
+                        s.init, s.dtype)
+        return jax.vmap(lambda k: _init_leaf(k, sub))(keys)
+    return s.init(key, tuple(s.shape), s.dtype)
+
+
+def init_params(key: jax.Array, tree):
+    """Concrete parameters for a ParamSpec tree (one fold-in per leaf)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    out = [_init_leaf(jax.random.fold_in(key, i), s) for i, s in
+           enumerate(leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(tuple(s.shape), s.dtype),
+                        tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical rules
+# ---------------------------------------------------------------------------
+
+def make_rules(mesh: Mesh, overrides: dict | None = None) -> dict:
+    """Default logical->physical mapping for a mesh, plus per-arch overrides.
+
+    Data-like axes ("pod", "data") carry the batch and FSDP; the "model"
+    axis carries tensor parallelism (heads/ff/vocab/experts).  Axes absent
+    from the mesh fall away (their logical names map to None = replicated).
+    """
+    names = set(mesh.axis_names)
+    data_axes = tuple(a for a in ("pod", "data") if a in names)
+    model_ax = "model" if "model" in names else None
+    batch: Any = None
+    if data_axes:
+        batch = data_axes if len(data_axes) > 1 else data_axes[0]
+    rules = {
+        "batch": batch,
+        "fsdp": "data" if "data" in names else None,
+        "model": model_ax,
+        "heads": model_ax,
+        "ff": model_ax,
+        "vocab": model_ax,
+        "experts": model_ax,
+        "layers": None,
+        "seq": None,
+        "act_embed": None,
+    }
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def logical_to_pspec(logical_axes: Sequence[str | None], rules: dict,
+                     mesh: Mesh, shape: Sequence[int]) -> P:
+    """Apply rules with the divisibility fallback.
+
+    Each dim gets its assigned mesh axes only if the dim size divides the
+    product of their sizes; composite assignments (e.g. batch over
+    ("pod", "data")) drop to the longest divisible prefix.  A mesh axis is
+    used at most once per spec (earlier dims win).
+    """
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, ln in zip(shape, logical_axes):
+        phys = rules.get(ln) if ln is not None else None
+        if phys is None:
+            entries.append(None)
+            continue
+        axes = phys if isinstance(phys, tuple) else (phys,)
+        axes = tuple(a for a in axes if a is not None and a not in used)
+        # longest divisible prefix
+        while axes and (dim % _axis_size(mesh, axes) != 0):
+            axes = axes[:-1]
+        if not axes:
+            entries.append(None)
+            continue
+        used.update(axes)
+        entries.append(axes if len(axes) > 1 else axes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def partition_specs(tree, rules: dict, mesh: Mesh):
+    """ParamSpec tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda s: logical_to_pspec(s.logical_axes, rules, mesh, s.shape),
+        tree, is_leaf=_is_spec)
+
+
+def named_shardings(tree, rules: dict, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_pspec(s.logical_axes, rules, mesh, s.shape)),
+        tree, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding context
+# ---------------------------------------------------------------------------
+
+_ACT_CTX: list[tuple[Mesh, dict]] = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: dict):
+    """While active, ``shard_activation`` / ``constrain_like_specs`` emit
+    ``with_sharding_constraint``s; outside they are identity (CPU tests)."""
+    _ACT_CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+def _current_ctx():
+    return _ACT_CTX[-1] if _ACT_CTX else None
+
+
+def shard_activation(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    ctx = _current_ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    axes = tuple(logical_axes)[: x.ndim]
+    axes = axes + (None,) * (x.ndim - len(axes))
+    spec = logical_to_pspec(axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_like_specs(params, spec_tree):
+    """Pin a params tree to the shardings its ParamSpec tree implies.
+
+    Used inside scan bodies: without the constraint GSPMD may replicate the
+    per-layer parameter slice (and its gradient accumulator) whole.
+    No-op outside an ``activation_sharding`` context.
+    """
+    ctx = _current_ctx()
+    if ctx is None:
+        return params
+    mesh, rules = ctx
+
+    def pin(s: ParamSpec, p):
+        spec = logical_to_pspec(s.logical_axes, rules, mesh, p.shape)
+        return jax.lax.with_sharding_constraint(p, NamedSharding(mesh, spec))
+
+    return jax.tree.map(pin, spec_tree, params, is_leaf=_is_spec)
+
+
+def cast_for_compute(params, dtype):
+    """Cast float leaves to the compute dtype (params stay f32 at rest)."""
+    def cast(p):
+        if hasattr(p, "dtype") and jnp.issubdtype(p.dtype, jnp.floating):
+            return p.astype(dtype)
+        return p
+    return jax.tree.map(cast, params)

@@ -1,8 +1,12 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-crossbar.py  fwd / bwd / pulse-update crossbar tiles (pl.pallas_call + BlockSpec)
+crossbar.py  fwd / bwd / dw / pulse-update crossbar tiles with fused
+             epilogues: in-kernel output-ADC quantization (fwd) and 8-bit
+             error dequantization (bwd/dw)
 flash_attention.py  fused online-softmax attention (LM prefill hot-spot)
 kmeans.py    Manhattan-distance assignment (the digital clustering core)
-ops.py       jit'd wrappers (interpret mode on CPU, compiled on TPU)
+ops.py       jit'd differentiable wrappers (custom_vjp training path,
+             block autotuner, conductance pad cache; interpret mode on
+             CPU, compiled on TPU)
 ref.py       pure-jnp oracles used by tests/test_kernels.py
 """

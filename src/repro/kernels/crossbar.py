@@ -10,7 +10,13 @@ buffering.
 
 Each kernel fuses what the paper's core fuses:
   fwd:    differential-pair subtraction + matmul + hard-sigmoid epilogue
-  bwd:    8-bit error codes dequantized in-kernel + transposed matmul
+          (+ optional in-kernel 3-bit output-ADC quantization, so chained
+          layers never round-trip activations through a separate quant op)
+  bwd:    transposed matmul through the same conductance pair, with 8-bit
+          sign-magnitude error codes dequantized in-kernel (codes + scale in,
+          fp32 out — the error never materializes at full precision in HBM)
+  dw:     outer-product gradient accumulation x^T @ delta over the batch
+          grid axis, with the same fused error dequantization
   update: outer-product + pulse discretization + conductance clipping
 """
 from __future__ import annotations
@@ -37,11 +43,18 @@ def _dimension_semantics(n_parallel: int, n_arbitrary: int):
         return None
 
 
+def _scale_spec():
+    """BlockSpec for a (1, 1) per-tensor dequantization scale, broadcast to
+    every grid cell."""
+    return pl.BlockSpec((1, 1), lambda i, j, k: (0, 0))
+
+
 # ---------------------------------------------------------------------------
-# Forward: y = h(x @ (G+ - G-))
+# Forward: y = ADC(h(x @ (G+ - G-)))
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(x_ref, gp_ref, gm_ref, o_ref, *, n_k: int, activation: bool):
+def _fwd_kernel(x_ref, gp_ref, gm_ref, o_ref, *, n_k: int, activation: bool,
+                adc_bits: int | None, adc_range: float):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -54,23 +67,40 @@ def _fwd_kernel(x_ref, gp_ref, gm_ref, o_ref, *, n_k: int, activation: bool):
 
     @pl.when(k == n_k - 1)
     def _epilogue():
+        o = o_ref[...]
         if activation:
-            o_ref[...] = jnp.clip(o_ref[...] * 0.25, -0.5, 0.5)
+            o = jnp.clip(o * 0.25, -0.5, 0.5)
+        if adc_bits is not None:
+            # fused output ADC (paper section IV.A): fixed-range uniform
+            # quantization over the op-amp rails — same math as
+            # core.quantization.adc_quantize with a static scale.
+            levels = float(2 ** adc_bits - 1)
+            scale = 2.0 * adc_range / levels
+            o = jnp.clip(o, -adc_range, adc_range)
+            o = jnp.round((o + adc_range) / scale) * scale - adc_range
+        o_ref[...] = o
 
 
 def crossbar_fwd_kernel(x: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
                         *, activation: bool = True,
+                        adc_bits: int | None = None,
+                        adc_range: float = 0.5,
                         bm: int = TILE_M, bk: int = TILE_ROWS,
                         bn: int = TILE_COLS,
                         interpret: bool = True) -> jax.Array:
-    """x: (M, K); g±: (K, N) -> (M, N) fp32."""
+    """x: (M, K); g±: (K, N) -> (M, N) fp32.
+
+    ``adc_bits`` fuses the output-ADC quantization into the epilogue so a
+    chained next layer consumes transport-quantized activations directly.
+    """
     M, K = x.shape
     _, N = g_plus.shape
     bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
     assert M % bm == 0 and K % bk == 0 and N % bn == 0, (x.shape, (bm, bk, bn))
     grid = (M // bm, N // bn, K // bk)
     return pl.pallas_call(
-        functools.partial(_fwd_kernel, n_k=grid[2], activation=activation),
+        functools.partial(_fwd_kernel, n_k=grid[2], activation=activation,
+                          adc_bits=adc_bits, adc_range=adc_range),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
@@ -85,47 +115,128 @@ def crossbar_fwd_kernel(x: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Backward: dx = dy @ (G+ - G-)^T   (contracting the neuron axis)
+# Backward: dx = dequant(dy) @ (G+ - G-)^T   (contracting the neuron axis)
 # ---------------------------------------------------------------------------
 
-def _bwd_kernel(dy_ref, gp_ref, gm_ref, o_ref, *, n_k: int):
+def _bwd_kernel(*refs, n_k: int, dequant: bool):
+    if dequant:
+        dy_ref, gp_ref, gm_ref, scale_ref, o_ref = refs
+    else:
+        dy_ref, gp_ref, gm_ref, o_ref = refs
     n = pl.program_id(2)
 
     @pl.when(n == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
+    dy = dy_ref[...].astype(jnp.float32)
+    if dequant:
+        # paper III.F step 1: errors travel as 8-bit sign-magnitude codes;
+        # the shared full-scale is applied here, inside the kernel.
+        dy = dy * scale_ref[0, 0]
     w = gp_ref[...].astype(jnp.float32) - gm_ref[...].astype(jnp.float32)
     # dy (bm, bn) x w (bk, bn)^T -> (bm, bk)
     o_ref[...] += jax.lax.dot_general(
-        dy_ref[...].astype(jnp.float32), w,
+        dy, w,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
 
 
 def crossbar_bwd_kernel(dy: jax.Array, g_plus: jax.Array, g_minus: jax.Array,
-                        *, bm: int = TILE_M, bk: int = TILE_ROWS,
+                        *, dy_scale: jax.Array | None = None,
+                        bm: int = TILE_M, bk: int = TILE_ROWS,
                         bn: int = TILE_COLS,
                         interpret: bool = True) -> jax.Array:
-    """dy: (M, N); g±: (K, N) -> dx (M, K) fp32."""
+    """dy: (M, N); g±: (K, N) -> dx (M, K) fp32.
+
+    When ``dy_scale`` is given, ``dy`` holds integer sign-magnitude error
+    codes (paper's 8-bit links) and is dequantized in-kernel as
+    ``codes * scale``.
+    """
     M, N = dy.shape
     K, _ = g_plus.shape
     bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
     assert M % bm == 0 and K % bk == 0 and N % bn == 0
     grid = (M // bm, K // bk, N // bn)
+    dequant = dy_scale is not None
+    in_specs = [
+        pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
+        pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+        pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
+    ]
+    args = [dy, g_plus, g_minus]
+    if dequant:
+        in_specs.append(_scale_spec())
+        args.append(jnp.asarray(dy_scale, jnp.float32).reshape(1, 1))
     return pl.pallas_call(
-        functools.partial(_bwd_kernel, n_k=grid[2]),
+        functools.partial(_bwd_kernel, n_k=grid[2], dequant=dequant),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j, n: (i, n)),
-            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
-            pl.BlockSpec((bk, bn), lambda i, j, n: (j, n)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bk), lambda i, j, n: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, K), jnp.float32),
         compiler_params=None if interpret else _dimension_semantics(2, 1),
         interpret=interpret,
-    )(dy, g_plus, g_minus)
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# Weight gradient: dw = x^T @ dequant(dy)   (contracting the batch axis)
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(*refs, n_m: int, dequant: bool):
+    if dequant:
+        x_ref, dy_ref, scale_ref, o_ref = refs
+    else:
+        x_ref, dy_ref, o_ref = refs
+    m = pl.program_id(2)
+
+    @pl.when(m == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    dy = dy_ref[...].astype(jnp.float32)
+    if dequant:
+        dy = dy * scale_ref[0, 0]
+    # x (bm, bk)^T x dy (bm, bn) -> (bk, bn), accumulated over the m axis
+    o_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), dy,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def crossbar_dw_kernel(x: jax.Array, dy: jax.Array, *,
+                       dy_scale: jax.Array | None = None,
+                       bm: int = TILE_M, bk: int = TILE_ROWS,
+                       bn: int = TILE_COLS,
+                       interpret: bool = True) -> jax.Array:
+    """x: (M, K); dy: (M, N) -> dw (K, N) fp32 (batch-summed outer product).
+
+    The conductance-pair gradients are ±dw: the two columns of a synapse
+    move oppositely (paper III.F step 3), so one accumulation serves both.
+    """
+    M, K = x.shape
+    _, N = dy.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (K // bk, N // bn, M // bm)
+    dequant = dy_scale is not None
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, m: (m, i)),
+        pl.BlockSpec((bm, bn), lambda i, j, m: (m, j)),
+    ]
+    args = [x, dy]
+    if dequant:
+        in_specs.append(_scale_spec())
+        args.append(jnp.asarray(dy_scale, jnp.float32).reshape(1, 1))
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, n_m=grid[2], dequant=dequant),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bk, bn), lambda i, j, m: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, N), jnp.float32),
+        compiler_params=None if interpret else _dimension_semantics(2, 1),
+        interpret=interpret,
+    )(*args)
 
 
 # ---------------------------------------------------------------------------

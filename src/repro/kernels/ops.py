@@ -1,14 +1,31 @@
-"""Jit'd public wrappers around the Pallas kernels.
+"""Jit'd, differentiable public wrappers around the Pallas kernels.
 
 On CPU (this container) kernels execute in interpret mode — the kernel body
 runs in Python with real BlockSpec tiling semantics, so the tests validate
 the tiling/accumulation logic.  On TPU ``interpret`` flips off automatically.
 
 Shapes are padded to tile multiples here (the paper pads networks into
-crossbar tiles the same way, section V.B); results are sliced back.
+crossbar tiles the same way, section V.B); results are sliced back.  Two
+hot-path amortizations (DESIGN.md §2.4):
+
+  * a block-size autotuner: candidate (bm, bk, bn) tilings are timed once
+    per (op, M, K, N) shape and the winner memoized (``autotune=True`` or
+    ``REPRO_XBAR_AUTOTUNE=1``; under tracing the cache is consulted but
+    never populated by timing),
+  * a conductance pad cache: static ``g±`` operands padded to tile
+    multiples are reused across eager calls instead of re-padded per call.
+
+``crossbar_matmul`` is the *training* entry point: a ``jax.custom_vjp``
+whose forward runs the fwd kernel and whose backward runs the bwd + dw
+kernels with the paper's 8-bit error codes dequantized in-kernel — so
+``jax.grad`` through a crossbar layer stays on the fused kernel path
+end-to-end.
 """
 from __future__ import annotations
 
+import os
+import time
+from collections import OrderedDict
 from functools import partial
 
 import jax
@@ -22,12 +39,17 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _tile(dim: int, tile: int) -> tuple[int, int]:
-    """(block_size, padded_dim) for one axis."""
-    if dim <= tile:
-        return dim, dim
-    pad = (-dim) % tile
-    return tile, dim + pad
+def _is_tracer(*xs) -> bool:
+    return any(isinstance(x, jax.core.Tracer) for x in xs)
+
+
+def _tile(dim: int, tile: int) -> int:
+    """Default block size for one axis."""
+    return dim if dim <= tile else tile
+
+
+def _pad_dim(dim: int, block: int) -> int:
+    return -(-dim // block) * block
 
 
 def _pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
@@ -35,56 +57,282 @@ def _pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
     return jnp.pad(x, pads) if any(p for _, p in pads) else x
 
 
-@partial(jax.jit, static_argnames=("activation", "interpret"))
+# ---------------------------------------------------------------------------
+# Block-size autotuner (memoized per shape) + conductance pad cache
+# ---------------------------------------------------------------------------
+
+_BLOCK_CACHE: dict[tuple, tuple[int, int, int]] = {}
+_PAD_CACHE: OrderedDict = OrderedDict()
+_PAD_CACHE_MAX = 32
+
+
+def _default_blocks(M: int, K: int, N: int) -> tuple[int, int, int]:
+    return (_tile(M, xbk.TILE_M), _tile(K, xbk.TILE_ROWS),
+            _tile(N, xbk.TILE_COLS))
+
+
+def _block_candidates(M: int, K: int, N: int) -> list[tuple[int, int, int]]:
+    cands = [_default_blocks(M, K, N)]
+    for bm, bk, bn in ((64, 256, 128), (128, 256, 256), (256, 512, 128)):
+        c = (min(bm, M), min(bk, K), min(bn, N))
+        if c not in cands:
+            cands.append(c)
+    return cands
+
+
+def _autotune_enabled(flag: bool | None) -> bool:
+    if flag is not None:
+        return flag
+    return os.environ.get("REPRO_XBAR_AUTOTUNE", "0") == "1"
+
+
+def block_config(op: str, M: int, K: int, N: int, *,
+                 autotune: bool | None = None,
+                 time_fn=None) -> tuple[int, int, int]:
+    """Memoized (bm, bk, bn) for an op/shape.  With autotuning enabled and a
+    ``time_fn(bm, bk, bn) -> None`` runner, candidates are timed once and
+    the winner cached; otherwise the MXU-derived default is cached."""
+    key = (op, M, K, N)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        return hit
+    blocks = _default_blocks(M, K, N)
+    tune = _autotune_enabled(autotune)
+    if tune and time_fn is None:
+        # tuning requested but impossible here (traced call): return the
+        # default WITHOUT caching it, so a later eager call can still tune
+        return blocks
+    if tune and time_fn is not None:
+        best, best_t = blocks, float("inf")
+        for cand in _block_candidates(M, K, N):
+            try:
+                time_fn(*cand)  # warmup / compile
+                t0 = time.perf_counter()
+                time_fn(*cand)
+                dt = time.perf_counter() - t0
+            except Exception:
+                continue
+            if dt < best_t:
+                best, best_t = cand, dt
+        blocks = best
+    _BLOCK_CACHE[key] = blocks
+    return blocks
+
+
+def _cached_pad(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    """Eager-path pad memo for static operands (conductance pairs).
+
+    Keyed by object identity + target shape; the source array is retained
+    while cached so its id cannot be recycled.  Updated weights are new
+    arrays -> new ids -> fresh entries (bounded FIFO)."""
+    if tuple(x.shape) == tuple(shape):
+        return x
+    key = (id(x), tuple(shape))
+    hit = _PAD_CACHE.get(key)
+    if hit is not None and hit[0] is x:
+        return hit[1]
+    padded = _pad_to(x, shape)
+    _PAD_CACHE[key] = (x, padded)
+    while len(_PAD_CACHE) > _PAD_CACHE_MAX:
+        _PAD_CACHE.popitem(last=False)
+    return padded
+
+
+def _maybe_cached_pad(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
+    if _is_tracer(x):
+        return _pad_to(x, shape)
+    return _cached_pad(x, shape)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("activation", "adc_bits", "adc_range",
+                                   "bm", "bk", "bn", "interpret"))
+def _fwd_call(x2, g_plus, g_minus, *, activation, adc_bits, adc_range,
+              bm, bk, bn, interpret):
+    M, K = x2.shape
+    N = g_plus.shape[1]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    y = xbk.crossbar_fwd_kernel(
+        _pad_to(x2, (Mp, Kp)), _pad_to(g_plus, (Kp, Np)),
+        _pad_to(g_minus, (Kp, Np)), activation=activation,
+        adc_bits=adc_bits, adc_range=adc_range,
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return y[:M, :N]
+
+
 def crossbar_fwd(x, g_plus, g_minus, *, activation: bool = True,
-                 interpret: bool | None = None):
-    """Tiled y = h(x @ (G+ - G-)).  x (..., K); g± (K, N) -> (..., N) f32."""
+                 adc_bits: int | None = None, adc_range: float = 0.5,
+                 interpret: bool | None = None,
+                 autotune: bool | None = None):
+    """Tiled y = ADC(h(x @ (G+ - G-))).  x (..., K); g± (K, N) -> (..., N).
+
+    ``adc_bits`` enables the fused output-ADC epilogue (transport
+    quantization without a separate op between layers)."""
     interpret = _default_interpret() if interpret is None else interpret
     lead = x.shape[:-1]
     K, N = g_plus.shape
     x2 = x.reshape(-1, K)
     M = x2.shape[0]
-    bm, Mp = _tile(M, xbk.TILE_M)
-    bk, Kp = _tile(K, xbk.TILE_ROWS)
-    bn, Np = _tile(N, xbk.TILE_COLS)
-    y = xbk.crossbar_fwd_kernel(
-        _pad_to(x2, (Mp, Kp)), _pad_to(g_plus, (Kp, Np)),
-        _pad_to(g_minus, (Kp, Np)), activation=activation,
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_fwd_call(
+            x2, g_plus, g_minus, activation=activation, adc_bits=adc_bits,
+            adc_range=adc_range, bm=bm, bk=bk, bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(x, g_plus, g_minus)
+    bm, bk, bn = block_config("fwd", M, K, N, autotune=autotune,
+                              time_fn=None if tracing else time_fn)
+    Kp, Np = _pad_dim(K, bk), _pad_dim(N, bn)
+    g_plus = _maybe_cached_pad(g_plus, (Kp, Np))
+    g_minus = _maybe_cached_pad(g_minus, (Kp, Np))
+    y = _fwd_call(x2, g_plus, g_minus, activation=activation,
+                  adc_bits=adc_bits, adc_range=adc_range,
+                  bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return y[:, :N].reshape(*lead, N)
+
+
+# ---------------------------------------------------------------------------
+# Backward (dx) and weight gradient (dw)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _bwd_call(dy2, g_plus, g_minus, dy_scale, *, bm, bk, bn, interpret):
+    M, N = dy2.shape
+    K = g_plus.shape[0]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    dx = xbk.crossbar_bwd_kernel(
+        _pad_to(dy2, (Mp, Np)), _pad_to(g_plus, (Kp, Np)),
+        _pad_to(g_minus, (Kp, Np)), dy_scale=dy_scale,
         bm=bm, bk=bk, bn=bn, interpret=interpret)
-    return y[:M, :N].reshape(*lead, N)
+    return dx[:M, :K]
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def crossbar_bwd(dy, g_plus, g_minus, *, interpret: bool | None = None):
-    """dx = dy @ (G+ - G-)^T.  dy (..., N); g± (K, N) -> (..., K) f32."""
+def crossbar_bwd(dy, g_plus, g_minus, *, dy_scale=None,
+                 interpret: bool | None = None,
+                 autotune: bool | None = None):
+    """dx = dequant(dy) @ (G+ - G-)^T.  dy (..., N); g± (K, N) -> (..., K).
+
+    With ``dy_scale``, ``dy`` carries the paper's 8-bit sign-magnitude error
+    codes; dequantization happens inside the kernel."""
     interpret = _default_interpret() if interpret is None else interpret
     lead = dy.shape[:-1]
     K, N = g_plus.shape
     dy2 = dy.reshape(-1, N)
     M = dy2.shape[0]
-    bm, Mp = _tile(M, xbk.TILE_M)
-    bk, Kp = _tile(K, xbk.TILE_ROWS)
-    bn, Np = _tile(N, xbk.TILE_COLS)
-    dx = xbk.crossbar_bwd_kernel(
-        _pad_to(dy2, (Mp, Np)), _pad_to(g_plus, (Kp, Np)),
-        _pad_to(g_minus, (Kp, Np)), bm=bm, bk=bk, bn=bn, interpret=interpret)
-    return dx[:M, :K].reshape(*lead, K)
 
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_bwd_call(dy2, g_plus, g_minus, dy_scale,
+                                        bm=bm, bk=bk, bn=bn,
+                                        interpret=interpret))
+
+    tracing = _is_tracer(dy, g_plus, g_minus)
+    bm, bk, bn = block_config("bwd", M, K, N, autotune=autotune,
+                              time_fn=None if tracing else time_fn)
+    Kp, Np = _pad_dim(K, bk), _pad_dim(N, bn)
+    g_plus = _maybe_cached_pad(g_plus, (Kp, Np))
+    g_minus = _maybe_cached_pad(g_minus, (Kp, Np))
+    dx = _bwd_call(dy2, g_plus, g_minus, dy_scale,
+                   bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return dx[:, :K].reshape(*lead, K)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _dw_call(x2, dy2, dy_scale, *, bm, bk, bn, interpret):
+    M, K = x2.shape
+    N = dy2.shape[1]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    dw = xbk.crossbar_dw_kernel(
+        _pad_to(x2, (Mp, Kp)), _pad_to(dy2, (Mp, Np)), dy_scale=dy_scale,
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return dw[:K, :N]
+
+
+def crossbar_dw(x, dy, *, dy_scale=None, interpret: bool | None = None,
+                autotune: bool | None = None):
+    """dw = x^T @ dequant(dy), batch-summed.  x (..., K); dy (..., N)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    K, N = x.shape[-1], dy.shape[-1]
+    x2 = x.reshape(-1, K)
+    dy2 = dy.reshape(-1, N)
+    M = x2.shape[0]
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_dw_call(x2, dy2, dy_scale, bm=bm, bk=bk,
+                                       bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(x, dy)
+    bm, bk, bn = block_config("dw", M, K, N, autotune=autotune,
+                              time_fn=None if tracing else time_fn)
+    return _dw_call(x2, dy2, dy_scale, bm=bm, bk=bk, bn=bn,
+                    interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable crossbar matmul (the training path)
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _crossbar_matmul(error_quant: bool, err_bits: int, interpret: bool,
+                     x, g_plus, g_minus):
+    y = crossbar_fwd(x, g_plus, g_minus, activation=False,
+                     interpret=interpret)
+    return y.astype(x.dtype)
+
+
+def _crossbar_matmul_fwd(error_quant, err_bits, interpret, x, g_plus, g_minus):
+    y = _crossbar_matmul(error_quant, err_bits, interpret, x, g_plus, g_minus)
+    return y, (x, g_plus, g_minus)
+
+
+def _crossbar_matmul_bwd(error_quant, err_bits, interpret, res, dy):
+    from repro.core import quantization as q
+    x, g_plus, g_minus = res
+    if error_quant:
+        # 8-bit sign-magnitude error transport (paper III.F step 1): the
+        # codes feed both kernels; dequantization is fused in-kernel.
+        qt = q.error_quantize(dy, err_bits)
+        dx = crossbar_bwd(qt.codes, g_plus, g_minus, dy_scale=qt.scale,
+                          interpret=interpret)
+        dw = crossbar_dw(x, qt.codes, dy_scale=qt.scale, interpret=interpret)
+    else:
+        dx = crossbar_bwd(dy, g_plus, g_minus, interpret=interpret)
+        dw = crossbar_dw(x, dy, interpret=interpret)
+    # d/dg_plus = +dw, d/dg_minus = -dw: the two columns move oppositely,
+    # matching the +dw/2 / -dw/2 hardware update convention.
+    return (dx.astype(x.dtype), dw.astype(g_plus.dtype),
+            (-dw).astype(g_minus.dtype))
+
+
+_crossbar_matmul.defvjp(_crossbar_matmul_fwd, _crossbar_matmul_bwd)
+
+
+def crossbar_matmul(x, g_plus, g_minus, *, error_quant: bool = False,
+                    err_bits: int = 8, interpret: bool | None = None):
+    """Differentiable y = x @ (G+ - G-) on the fused kernel path.
+
+    Forward runs the fwd kernel; ``jax.grad`` runs the bwd + dw kernels with
+    the incoming error optionally quantized to ``err_bits`` sign-magnitude
+    codes (dequantized in-kernel) — the same semantics as the reference
+    ``core.crossbar._xbar_matmul`` VJP, kernel-tiled."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _crossbar_matmul(error_quant, err_bits, interpret,
+                            x, g_plus, g_minus)
+
+
+# ---------------------------------------------------------------------------
+# Pulse update
+# ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("lr", "max_dw", "levels", "w_max",
-                                   "interpret"))
-def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
-                 max_dw: float = 0.05, levels: int = 128, w_max: float = 1.0,
-                 interpret: bool | None = None):
-    """Fused rank-1 pulse update.  x (..., K); delta (..., N); g± (K, N)."""
-    interpret = _default_interpret() if interpret is None else interpret
-    K, N = g_plus.shape
-    x2 = x.reshape(-1, K)
-    d2 = delta.reshape(-1, N)
-    M = x2.shape[0]
-    bm, Mp = _tile(M, xbk.TILE_M)
-    bk, Kp = _tile(K, xbk.TILE_ROWS)
-    bn, Np = _tile(N, xbk.TILE_COLS)
+                                   "bm", "bk", "bn", "interpret"))
+def _pulse_call(g_plus, g_minus, x2, d2, *, lr, max_dw, levels, w_max,
+                bm, bk, bn, interpret):
+    M, K = x2.shape
+    N = d2.shape[1]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
     gp2, gm2 = xbk.pulse_update_kernel(
         _pad_to(g_plus, (Kp, Np)), _pad_to(g_minus, (Kp, Np)),
         _pad_to(x2, (Mp, Kp)), _pad_to(d2, (Mp, Np)),
@@ -92,6 +340,34 @@ def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
         bm=bm, bk=bk, bn=bn, interpret=interpret)
     return gp2[:K, :N], gm2[:K, :N]
 
+
+def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
+                 max_dw: float = 0.05, levels: int = 128, w_max: float = 1.0,
+                 interpret: bool | None = None,
+                 autotune: bool | None = None):
+    """Fused rank-1 pulse update.  x (..., K); delta (..., N); g± (K, N)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    K, N = g_plus.shape
+    x2 = x.reshape(-1, K)
+    d2 = delta.reshape(-1, N)
+    M = x2.shape[0]
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_pulse_call(
+            g_plus, g_minus, x2, d2, lr=lr, max_dw=max_dw, levels=levels,
+            w_max=w_max, bm=bm, bk=bk, bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(g_plus, g_minus, x, delta)
+    bm, bk, bn = block_config("pulse", M, K, N, autotune=autotune,
+                              time_fn=None if tracing else time_fn)
+    return _pulse_call(g_plus, g_minus, x2, d2, lr=lr, max_dw=max_dw,
+                       levels=levels, w_max=w_max, bm=bm, bk=bk, bn=bn,
+                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Attention / clustering (unchanged interfaces)
+# ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("causal", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True,
@@ -124,7 +400,7 @@ def kmeans_assign(x, centers, *, interpret: bool | None = None):
     """Manhattan assignment.  x (n, d); centers (k, d) -> (n,) int32."""
     interpret = _default_interpret() if interpret is None else interpret
     n, d = x.shape
-    bn, np_ = _tile(n, kmk.SAMPLE_TILE)
-    xp = _pad_to(x, (np_, d))
+    bn = _tile(n, kmk.SAMPLE_TILE)
+    xp = _pad_to(x, (_pad_dim(n, bn), d))
     out = kmk.kmeans_assign_kernel(xp, centers, bn=bn, interpret=interpret)
     return out[:n]

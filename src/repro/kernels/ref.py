@@ -22,6 +22,11 @@ def crossbar_bwd_ref(dy: jax.Array, g_plus: jax.Array, g_minus: jax.Array
     return dy.astype(jnp.float32) @ w.T
 
 
+def crossbar_dw_ref(x: jax.Array, dy: jax.Array) -> jax.Array:
+    """dw = x^T @ dy (paper Eq. 6 outer product, batch-summed)."""
+    return x.astype(jnp.float32).T @ dy.astype(jnp.float32)
+
+
 def pulse_update_ref(g_plus: jax.Array, g_minus: jax.Array, x: jax.Array,
                      delta: jax.Array, *, lr: float, max_dw: float,
                      levels: int, w_max: float

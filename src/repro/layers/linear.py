@@ -42,6 +42,7 @@ class XbarMode:
     err_bits: int = 8          # transport quantization of errors (C4)
     w_max: float = 4.0         # representable |w| (conductance range, C1)
     paired: bool = True        # store literal (G+, G-) vs (w, common-mode)
+    use_kernel: bool = False   # paired projections via the fused Pallas path
 
     @staticmethod
     def from_config(cfg) -> "XbarMode | None":
@@ -50,7 +51,8 @@ class XbarMode:
         return XbarMode(act_bits=getattr(cfg, "xbar_act_bits", 8),
                         err_bits=getattr(cfg, "xbar_err_bits", 8),
                         w_max=getattr(cfg, "xbar_w_max", 4.0),
-                        paired=getattr(cfg, "xbar_paired", True))
+                        paired=getattr(cfg, "xbar_paired", True),
+                        use_kernel=getattr(cfg, "xbar_use_kernel", False))
 
 
 def dense_spec(d_in: int, d_out: int, axes: tuple[str | None, str | None],
@@ -112,6 +114,16 @@ def dense_apply(params: dict[str, jax.Array], x: jax.Array, *,
     if xbar is None:
         w = params["w"].astype(compute_dtype)
         y = x.astype(compute_dtype) @ w
+    elif xbar.use_kernel and "g_plus" in params:
+        # Fused Pallas training path: the differential-pair subtraction
+        # happens inside the fwd kernel; jax.grad runs the bwd + dw kernels
+        # with in-kernel 8-bit error dequantization (kernels/ops.py).
+        from repro.kernels import ops as kernel_ops
+        xq = q.fake_quant(x.astype(compute_dtype), xbar.act_bits)
+        y = kernel_ops.crossbar_matmul(
+            xq, params["g_plus"].astype(compute_dtype),
+            params["g_minus"].astype(compute_dtype),
+            error_quant=True, err_bits=xbar.err_bits)
     else:
         if "w" in params:   # (w, common-mode) reparametrization
             w = params["w"].astype(compute_dtype)

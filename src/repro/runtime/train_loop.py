@@ -38,6 +38,26 @@ class TrainState:
     step: int
 
 
+def make_paper_train_step(spec, lr: float, *, use_kernel: bool = True):
+    """Jit-compiled stochastic-BP step for the paper-application path.
+
+    Wraps :func:`repro.core.crossbar.paper_backprop_step_scan` — the
+    lax.scan pipeline over stacked equal-shaped crossbar layers whose body
+    runs the Pallas bwd + pulse-update kernels with donated conductance
+    buffers.  Returns ``step(stacked, batch) -> (stacked, err)`` where
+    ``batch = {"x": ..., "target": ...}`` and ``stacked`` comes from
+    ``crossbar.stack_layers``.  NOTE: the input buffers are donated — reuse
+    the returned ``stacked``, not the argument.
+    """
+    from repro.core import crossbar as xb
+
+    def step(stacked, batch):
+        return xb.paper_backprop_step_scan(stacked, batch["x"],
+                                           batch["target"], spec, lr,
+                                           use_kernel)
+    return step
+
+
 def make_train_step(model: Model, opt: Optimizer, param_shardings=None,
                     grad_accum: int = 1):
     """Build the jit-able train step.

@@ -8,6 +8,63 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
 
+# ---------------------------------------------------------------------------
+# Optional-dependency shim: when hypothesis is not installed, property tests
+# skip gracefully instead of erroring the whole module at import.
+# ---------------------------------------------------------------------------
+
+def _install_hypothesis_stub():
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    import types
+
+    def given(*_a, **_kw):
+        def deco(_f):
+            def _skipped():
+                pytest.skip("hypothesis not installed")
+            _skipped.__name__ = _f.__name__
+            _skipped.__doc__ = _f.__doc__
+            return _skipped
+        return deco
+
+    class settings:  # noqa: N801 - mirrors the hypothesis API
+        def __init__(self, *a, **kw):
+            pass
+
+        def __call__(self, f):
+            return f
+
+        @staticmethod
+        def register_profile(*a, **kw):
+            pass
+
+        @staticmethod
+        def load_profile(*a, **kw):
+            pass
+
+    def _strategy(*_a, **_kw):
+        return None
+
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("lists", "floats", "integers", "booleans", "sampled_from",
+                 "tuples", "one_of", "just", "text", "composite"):
+        setattr(st, name, _strategy)
+
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install_hypothesis_stub()
+
+
 def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
     """Run a python snippet in a fresh process with N fake devices.
 

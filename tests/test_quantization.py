@@ -1,4 +1,8 @@
-"""Property tests for the paper's transport quantizers."""
+"""Property tests for the paper's transport quantizers.
+
+When hypothesis is not installed, conftest.py provides a stub whose
+``@given`` marks each property test as skipped instead of erroring the
+module at import."""
 import jax
 import jax.numpy as jnp
 import numpy as np
