@@ -1,0 +1,59 @@
+"""Virtual-chip benchmark: samples/s and simulated pJ/sample per paper app.
+
+Two kinds of rows per application (suite key ``sim`` -> BENCH_sim.json):
+
+  * ``sim.<app>.wall``    — wall-clock us per streamed sample through the
+                            batched-Pallas stage execution (host speed of
+                            the simulator itself);
+  * ``sim.<app>.infer`` / ``.stream`` / ``.train``
+                          — *simulated* chip time and pJ/sample from the
+                            measured counters (the paper's Tables III/IV
+                            quantities, re-derived by execution);
+  * ``sim.<app>.xval``    — worst relative error of the sim<->hw_model
+                            cross-validation (must stay <= 1%).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import hw_model as hw
+from repro.launch.chipsim import build_chip
+
+# isolet is ~130 cores of interpret-mode kernels — representative without
+# making the suite minutes-long.
+APPS = ("kdd_anomaly", "mnist_class")
+STREAM_SAMPLES = 8
+
+
+def main() -> None:
+    for app in APPS:
+        dims = hw.PAPER_NETWORKS[app]
+        chip = build_chip(app, seed=0)
+        x = jax.random.uniform(jax.random.PRNGKey(1),
+                               (STREAM_SAMPLES, dims[0]),
+                               minval=-0.5, maxval=0.5)
+        tgt = jax.random.uniform(jax.random.PRNGKey(2),
+                                 (1, dims[-1]), minval=-0.5, maxval=0.5)
+
+        wall = common.time_call(
+            lambda: chip.infer(x, count=False), iters=5, warmup=1)
+        common.row(f"sim.{app}.wall", wall / STREAM_SAMPLES,
+                   f"host us/sample, {chip.placement.n_cores} cores")
+
+        chip.infer_stream(x)
+        chip.train_step(x[:1], jnp.tile(tgt, (1, 1)), lr=0.1)
+        rep = chip.report()
+        for r in rep.rows():
+            common.row(r["name"], r["us_per_call"], r["derived"])
+
+        xval = rep.compare_hw(hw.network_cost(app, dims))
+        worst = max(xval.values())
+        common.row(f"sim.{app}.xval", worst * 100.0,
+                   "worst rel err % vs hw_model (contract <=1)")
+        assert worst <= 0.01, (app, xval)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ import time
 import traceback
 
 # suites whose rows are persisted as BENCH_<key>.json
-JSON_SUITES = ("kernels",)
+JSON_SUITES = ("kernels", "sim")
 
 BENCHES = {
     "table2": "benchmarks.bench_core_model",        # Table II
@@ -27,6 +27,7 @@ BENCHES = {
     "anomaly": "benchmarks.bench_anomaly",          # Figs 18-20
     "cluster": "benchmarks.bench_clustering",       # section IV.B core
     "kernels": "benchmarks.bench_kernels",          # Pallas kernels
+    "sim": "benchmarks.bench_chip_sim",             # virtual chip (repro.sim)
     "lm": "benchmarks.bench_lm_step",               # framework LM steps
     "dryrun": "benchmarks.bench_dryrun_table",      # §Roofline cells (cached)
 }

@@ -84,15 +84,23 @@ def core_step_energy_j(time_us: float, power_mw: float, cores: int) -> float:
 
 
 def network_cost(name: str, dims: list[int], *, pretraining: bool = False,
-                 input_bits: int = 8) -> AppCost:
+                 input_bits: int = 8,
+                 share_small_layers: bool = False) -> AppCost:
     """Cost one training iteration + one recognition pass for a network.
 
     Training = forward + backward + update on every layer's cores, phases
     serialized across layers (the layers of one sample execute in sequence),
     plus routing of neuron outputs and off-chip IO of the input sample.
+
+    The same counting is reproduced from *measured* counters by the virtual
+    chip (``repro.sim.report``); ``tests/test_chip_sim.py`` pins the two to
+    1% agreement (DESIGN.md "Virtual chip" cross-validation contract).
     """
-    nmap: NetworkMap = (map_autoencoder_pretraining(dims) if pretraining
-                        else map_network(dims))
+    nmap: NetworkMap = (
+        map_autoencoder_pretraining(dims,
+                                    share_small_layers=share_small_layers)
+        if pretraining
+        else map_network(dims, share_small_layers=share_small_layers))
     n_layers = len(nmap.layers)
 
     route_us = nmap.routed_outputs / ROUTING_CLOCK_HZ * 1e6

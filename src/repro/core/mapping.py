@@ -7,13 +7,21 @@ Implements section V.B "Mapping Neural Networks to Cores":
   * fan-in splits add an aggregation stage (Fig. 14): ``fan_out`` aggregation
     neurons each with ``ceil(fan_in/400)`` inputs, packed into cores,
   * layers much smaller than a core may share one core (pipelined through the
-    core's routing switch loopback, Fig. 2),
+    core's routing switch loopback, Fig. 2) — ``share_small_layers=True``
+    packs consecutive single-core layers into one physical core while their
+    combined rows/columns fit the crossbar (this is how Table III reaches
+    1 core for the 41-15-41 anomaly network),
   * routed traffic per layer = fan_out neuron outputs (ADC codes) over 8-bit
     links (section V.C).
 
 The mapper also emits the static routing schedule length (cycles) used by the
 hardware model.  This is the compile-time "who sends what when" table that,
 at pod scale, becomes the XLA SPMD collective schedule (DESIGN.md section 2).
+
+A :class:`NetworkMap` is also the placement contract consumed by the
+executable virtual chip (``repro.sim``, DESIGN.md "Virtual chip"): the sim
+materializes each LayerMap's ``row_tiles x col_tiles`` grid as stacked
+conductance arrays and executes them as batched Pallas kernel calls.
 """
 from __future__ import annotations
 
@@ -32,10 +40,20 @@ class LayerMap:
     cores: int              # crossbar cores for the layer itself
     agg_cores: int          # cores implementing the aggregation stage
     routed_outputs: int     # neuron outputs crossing the routing network
+    shared: bool = False    # rides in the previous layer's core (loopback,
+                            # Fig. 2) — contributes 0 *additional* cores
 
     @property
     def total_cores(self) -> int:
+        """Cores the layer's phases execute on (energy accounting) —
+        unchanged by sharing: a shared core runs each resident layer in
+        sequence, so per-layer execution cost is identical."""
         return self.cores + self.agg_cores
+
+    @property
+    def placed_cores(self) -> int:
+        """Additional physical cores the layer occupies (area/core count)."""
+        return 0 if self.shared else self.total_cores
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,16 +79,50 @@ def map_layer(fan_in: int, fan_out: int, rows: int = CORE_ROWS,
                     agg_cores, routed)
 
 
+def _pack_shared(layer_maps: list[LayerMap], rows: int,
+                 cols: int) -> list[LayerMap]:
+    """Greedy loopback packing: consecutive single-core layers share one
+    core while their combined (fan_in+1) rows and fan_out columns fit the
+    crossbar.  The shared core processes the resident layers in sequence
+    through the routing-switch loopback (Fig. 2), so only *area* changes;
+    per-layer execution cost does not."""
+    packed: list[LayerMap] = []
+    used_rows = used_cols = 0
+    open_group = False
+    for lm in layer_maps:
+        single = lm.row_tiles == 1 and lm.col_tiles == 1 and lm.agg_cores == 0
+        if not single:
+            packed.append(lm)
+            open_group = False
+            continue
+        need_r, need_c = lm.fan_in + 1, lm.fan_out
+        if (open_group and used_rows + need_r <= rows
+                and used_cols + need_c <= cols):
+            packed.append(dataclasses.replace(lm, shared=True))
+            used_rows += need_r
+            used_cols += need_c
+        else:
+            packed.append(lm)
+            used_rows, used_cols = need_r, need_c
+            open_group = True
+    return packed
+
+
 def map_network(dims: list[int], rows: int = CORE_ROWS,
-                cols: int = CORE_COLS) -> NetworkMap:
-    layers = tuple(map_layer(i, o, rows, cols) for i, o in zip(dims, dims[1:]))
-    cores = sum(l.total_cores for l in layers)
-    routed = sum(l.routed_outputs for l in layers)
-    return NetworkMap(layers, cores, routed, routing_cycles=routed)
+                cols: int = CORE_COLS, *,
+                share_small_layers: bool = False) -> NetworkMap:
+    layer_maps = [map_layer(i, o, rows, cols) for i, o in zip(dims, dims[1:])]
+    if share_small_layers:
+        layer_maps = _pack_shared(layer_maps, rows, cols)
+    cores = sum(l.placed_cores for l in layer_maps)
+    routed = sum(l.routed_outputs for l in layer_maps)
+    return NetworkMap(tuple(layer_maps), cores, routed, routing_cycles=routed)
 
 
 def map_autoencoder_pretraining(dims: list[int], rows: int = CORE_ROWS,
-                                cols: int = CORE_COLS) -> NetworkMap:
+                                cols: int = CORE_COLS, *,
+                                share_small_layers: bool = False
+                                ) -> NetworkMap:
     """Layer-wise AE pretraining instantiates, per hidden layer, the encoder
     plus a temporary decoder back to the layer input (section III.D) — the
     hardware must provision cores for both, which is why the paper's core
@@ -79,6 +131,8 @@ def map_autoencoder_pretraining(dims: list[int], rows: int = CORE_ROWS,
     for i, o in zip(dims, dims[1:]):
         layer_maps.append(map_layer(i, o, rows, cols))      # encoder layer
         layer_maps.append(map_layer(o, i, rows, cols))      # temp decoder
-    cores = sum(l.total_cores for l in layer_maps)
+    if share_small_layers:
+        layer_maps = _pack_shared(layer_maps, rows, cols)
+    cores = sum(l.placed_cores for l in layer_maps)
     routed = sum(l.routed_outputs for l in layer_maps)
     return NetworkMap(tuple(layer_maps), cores, routed, routing_cycles=routed)

@@ -366,6 +366,120 @@ def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
 
 
 # ---------------------------------------------------------------------------
+# Stacked (multicore) entry points — the virtual chip's execution engine
+# ---------------------------------------------------------------------------
+# A pipeline stage of the simulated chip (repro.sim) holds T physical cores
+# as stacked conductance arrays (T, rows, cols).  All cores of a stage
+# execute as ONE vmapped Pallas call: vmap lifts the core axis into the
+# kernel grid, so the stage is a single fused dispatch, not a Python loop
+# over cores (DESIGN.md "Virtual chip").
+
+
+@partial(jax.jit, static_argnames=("activation", "adc_bits", "adc_range",
+                                   "bm", "bk", "bn", "interpret"))
+def _fwd_stacked_call(xs, g_plus, g_minus, *, activation, adc_bits,
+                      adc_range, bm, bk, bn, interpret):
+    T, M, K = xs.shape
+    N = g_plus.shape[2]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    call = partial(xbk.crossbar_fwd_kernel, activation=activation,
+                   adc_bits=adc_bits, adc_range=adc_range,
+                   bm=bm, bk=bk, bn=bn, interpret=interpret)
+    y = jax.vmap(call)(_pad_to(xs, (T, Mp, Kp)),
+                       _pad_to(g_plus, (T, Kp, Np)),
+                       _pad_to(g_minus, (T, Kp, Np)))
+    return y[:, :M, :N]
+
+
+def crossbar_fwd_stacked(xs, g_plus, g_minus, *, activation: bool = False,
+                         adc_bits: int | None = None, adc_range: float = 0.5,
+                         interpret: bool | None = None):
+    """Batched multi-core forward: one call evaluates T crossbars.
+
+    xs (T, M, K); g± (T, K, N) -> (T, M, N).  Core t computes
+    ``xs[t] @ (g_plus[t] - g_minus[t])`` — the per-stage dispatch of the
+    virtual chip, where slice t is one physical core's conductance array.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    T, M, K = xs.shape
+    N = g_plus.shape[2]
+    bm, bk, bn = _default_blocks(M, K, N)
+    return _fwd_stacked_call(xs, g_plus, g_minus, activation=activation,
+                             adc_bits=adc_bits, adc_range=adc_range,
+                             bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _bwd_stacked_call(dys, g_plus, g_minus, *, bm, bk, bn, interpret):
+    T, M, N = dys.shape
+    K = g_plus.shape[1]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    call = partial(xbk.crossbar_bwd_kernel, bm=bm, bk=bk, bn=bn,
+                   interpret=interpret)
+    dx = jax.vmap(call)(_pad_to(dys, (T, Mp, Np)),
+                        _pad_to(g_plus, (T, Kp, Np)),
+                        _pad_to(g_minus, (T, Kp, Np)))
+    return dx[:, :M, :K]
+
+
+def crossbar_bwd_stacked(dys, g_plus, g_minus, *,
+                         interpret: bool | None = None):
+    """Batched multi-core error backprop: dx[t] = dys[t] @ (G+ - G-)[t]^T.
+
+    dys (T, M, N); g± (T, K, N) -> (T, M, K).  The virtual chip drives each
+    core's error through its own conductances (Eq. 7 / Fig. 9), all cores of
+    a stage in one call.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    T, M, N = dys.shape
+    K = g_plus.shape[1]
+    bm, bk, bn = _default_blocks(M, K, N)
+    return _bwd_stacked_call(dys, g_plus, g_minus, bm=bm, bk=bk, bn=bn,
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("lr", "max_dw", "levels", "w_max",
+                                   "bm", "bk", "bn", "interpret"))
+def _pulse_stacked_call(g_plus, g_minus, xs, ds, *, lr, max_dw, levels,
+                        w_max, bm, bk, bn, interpret):
+    T, M, K = xs.shape
+    N = ds.shape[2]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+
+    def one(gp, gm, x2, d2):
+        return xbk.pulse_update_kernel(gp, gm, x2, d2, lr=lr, max_dw=max_dw,
+                                       levels=levels, w_max=w_max,
+                                       bm=bm, bk=bk, bn=bn,
+                                       interpret=interpret)
+
+    gp2, gm2 = jax.vmap(one)(_pad_to(g_plus, (T, Kp, Np)),
+                             _pad_to(g_minus, (T, Kp, Np)),
+                             _pad_to(xs, (T, Mp, Kp)),
+                             _pad_to(ds, (T, Mp, Np)))
+    return gp2[:, :K, :N], gm2[:, :K, :N]
+
+
+def pulse_update_stacked(g_plus, g_minus, xs, deltas, *, lr: float,
+                         max_dw: float = 0.05, levels: int = 128,
+                         w_max: float = 1.0,
+                         interpret: bool | None = None):
+    """Batched multi-core pulse update (paper III.F step 3) on conductance
+    stacks: xs (T, M, K); deltas (T, M, N); g± (T, K, N) -> updated stacks.
+
+    Each core's local outer product + pulse discretization + clipping runs
+    in its own kernel grid cell; the whole stage updates in one call — this
+    is the virtual chip's update phase writing G± in place.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    T, M, K = xs.shape
+    N = deltas.shape[2]
+    bm, bk, bn = _default_blocks(M, K, N)
+    return _pulse_stacked_call(g_plus, g_minus, xs, deltas, lr=lr,
+                               max_dw=max_dw, levels=levels, w_max=w_max,
+                               bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # Attention / clustering (unchanged interfaces)
 # ---------------------------------------------------------------------------
 

@@ -1,1 +1,2 @@
-"""Launchers: production mesh, dry-run, roofline, sweep, train, serve."""
+"""Launchers: production mesh, dry-run, roofline, sweep, train, serve,
+virtual-chip simulation (`python -m repro.launch.chipsim`)."""

@@ -1,8 +1,15 @@
-"""Fault-tolerance primitives: preemption simulation, straggler watchdog.
+"""Fault-tolerance primitives: preemption, stragglers, device faults.
 
-On real pods these hooks bind to the cluster scheduler; in this container
-they are exercised by the tests (kill/restore bitwise-identical resume) and
-by the train loop's per-step watchdog.
+On real pods the preemption/straggler hooks bind to the cluster scheduler;
+in this container they are exercised by the tests (kill/restore
+bitwise-identical resume) and by the train loop's per-step watchdog.
+
+`MemristorFaults` models the *device* level instead: stuck-on/stuck-off
+memristor fractions and per-core conductance variation, as deterministic
+seeded masks.  The virtual chip (`repro.sim.faults`) layers these into its
+stacked conductance arrays to measure accuracy degradation vs fault rate
+(DESIGN.md "Virtual chip"); `examples/fault_tolerant_training.py`
+demonstrates the sweep.
 """
 from __future__ import annotations
 
@@ -46,6 +53,76 @@ class StragglerWatchdog:
             self.events.append((step, dt, med))
             return True
         return False
+
+
+@dataclasses.dataclass(frozen=True)
+class MemristorFaults:
+    """Deterministic memristor-level fault model (seeded).
+
+    ``stuck_on``/``stuck_off`` are independent per-device probabilities: a
+    stuck-on cell reads the maximum conductance (``w_max`` in weight
+    units), a stuck-off cell reads zero, regardless of what was
+    programmed.  ``variation_sigma`` adds per-core multiplicative lognormal
+    conductance spread (process variation between fabricated cores).
+
+    Masks are pure functions of ``(seed, salt, shape)`` — the same chip
+    always breaks the same devices, so fault-sweep results are
+    reproducible and checkpoint/resume keeps the fault pattern.
+    """
+    stuck_on: float = 0.0
+    stuck_off: float = 0.0
+    variation_sigma: float = 0.0
+    seed: int = 0
+
+    @property
+    def is_null(self) -> bool:
+        return (self.stuck_on == 0.0 and self.stuck_off == 0.0
+                and self.variation_sigma == 0.0)
+
+    def masks(self, shape: tuple[int, ...], salt: int = 0):
+        """(stuck_on_mask, stuck_off_mask) boolean arrays for one
+        conductance array.  Overlaps resolve stuck-off wins (an open
+        filament cannot conduct)."""
+        import jax
+
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), salt)
+        k_on, k_off = jax.random.split(key)
+        u_on = jax.random.uniform(k_on, shape)
+        u_off = jax.random.uniform(k_off, shape)
+        off = u_off < self.stuck_off
+        on = (u_on < self.stuck_on) & ~off
+        return on, off
+
+    def core_scales(self, n_cores: int, salt: int = 0):
+        """Per-core lognormal conductance scale factors (length n_cores)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self.variation_sigma == 0.0:
+            return jnp.ones((n_cores,))
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed),
+                                 1_000_003 + salt)
+        return jnp.exp(self.variation_sigma
+                       * jax.random.normal(key, (n_cores,)))
+
+    def apply(self, g, salt: int = 0, w_max: float = 1.0, *,
+              variation: bool = True):
+        """Overlay the fault pattern on a conductance array.
+
+        ``g`` is (rows, cols) or a (cores, rows, cols) stack; per-core
+        variation applies along the leading stack axis, clipped to the
+        physical conductance range.  Pass ``variation=False`` when
+        *re-asserting* stuck masks on already-fabricated (already-scaled)
+        conductances — the stuck overlay is idempotent, the fabrication
+        scaling is not."""
+        import jax.numpy as jnp
+
+        g = jnp.asarray(g)
+        if variation and self.variation_sigma > 0.0 and g.ndim == 3:
+            g = jnp.clip(g * self.core_scales(g.shape[0], salt)[:, None, None],
+                         0.0, w_max)
+        on, off = self.masks(g.shape, salt)
+        return jnp.where(off, 0.0, jnp.where(on, w_max, g))
 
 
 class StepTimer:

@@ -1,0 +1,23 @@
+"""repro.sim — an executable multicore chip simulator (virtual chip).
+
+The analytic side of the repo (`core/mapping.py` allocates cores,
+`core/hw_model.py` prices them) never *runs* a network as the paper's chip.
+This package does: it materializes a :class:`repro.core.mapping.NetworkMap`
+placement as stacked per-core conductance arrays, executes inference and the
+paper's three training phases (fwd/bwd/update, Table II) through batched
+Pallas crossbar kernels, moves neuron outputs between cores through an
+8-bit-link NoC model with per-link cycle counters, and reports time/energy
+from *measured* counters — cross-validated against `hw_model`'s analytic
+numbers (DESIGN.md "Virtual chip").
+
+Modules:
+  placer   NetworkMap + layer params -> stacked conductance tiles per stage
+  noc      static routing schedule model, per-link cycle/bit counters
+  chip     VirtualChip: infer / pipelined streaming / train_step + counters
+  report   SimReport: counters -> time/energy, hw_model cross-validation
+  faults   memristor stuck-on/stuck-off masks + per-core variation injection
+"""
+from repro.sim.chip import VirtualChip  # noqa: F401
+from repro.sim.faults import inject_faults  # noqa: F401
+from repro.sim.placer import Placement, place_network  # noqa: F401
+from repro.sim.report import SimReport  # noqa: F401

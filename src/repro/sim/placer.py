@@ -1,0 +1,209 @@
+"""Placer: materialize a NetworkMap as stacked per-core conductance arrays.
+
+Each network layer becomes one pipeline *stage* (DESIGN.md "Virtual chip"):
+
+  * the layer's ``row_tiles x col_tiles`` core grid (section V.B) is stored
+    as ONE stacked array ``(T, rows, cols)`` with ``T = row_tiles*col_tiles``
+    — slice ``t = i*col_tiles + j`` is the physical core holding fan-in tile
+    ``i`` of fan-out tile ``j``.  The whole stage executes as a single
+    batched Pallas call (`kernels/ops.crossbar_fwd_stacked`), never a Python
+    loop over cores;
+  * row 0 of the first fan-in tile is the provisioned bias row (Fig. 8).
+    The repo's crossbar layers have no bias term, so its conductances start
+    at zero and its input line is driven to 0 — the row occupies hardware
+    (mapping counts it) but contributes nothing numerically;
+  * layers split over fan-in get a Fig.-14 aggregation stage: ``col_tiles``
+    cores whose unit-conductance block pattern sums the ``row_tiles``
+    sub-neuron partials per neuron.  It too executes as one stacked call.
+    The sim implements *exact aggregation* (``split_activation=False``):
+    partials cross the NoC at full precision and the activation is applied
+    once after aggregation, which is what `crossbar_apply` computes.  Known
+    idealization, shared with the mapper: an aggregation core serving
+    ``cols`` neurons of fan-in ``row_tiles`` is modeled with
+    ``row_tiles*cols`` input lines, which exceeds a physical core's
+    ``rows`` inputs once ``row_tiles > rows/cols`` (e.g. the isolet
+    2000->1000 layer).  `core/mapping.py` prices exactly this shape
+    (``agg_cores = ceil(row_tiles/rows) * col_tiles``), the paper does not
+    specify multi-level aggregation, and the sim<->hw_model contract needs
+    both sides to count the same chip — so the sim executes what the
+    mapper prices.
+
+The placement is mutable state: the virtual chip's update phase writes new
+conductance stacks back (`Placement.set_stage_stacks`), and
+`Placement.extract_params` slices the stacks back into the per-layer
+``{"g_plus", "g_minus"}`` dicts the rest of the repo consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.crossbar import CORE_COLS, CORE_ROWS
+from repro.core.mapping import LayerMap, NetworkMap
+
+
+@dataclasses.dataclass
+class Stage:
+    """One pipeline stage: a layer's core grid as stacked conductances."""
+    index: int
+    lmap: LayerMap
+    rows: int
+    cols: int
+    g_plus: jax.Array            # (row_tiles*col_tiles, rows, cols)
+    g_minus: jax.Array
+    agg_plus: jax.Array | None   # (col_tiles, row_tiles*cols, cols) or None
+    agg_minus: jax.Array | None
+
+    @property
+    def n_cores(self) -> int:
+        """Physical cores executing this stage (main grid + aggregation) —
+        measured from the materialized stacks, not copied from the mapper."""
+        agg = 0 if self.agg_plus is None else self.agg_plus.shape[0]
+        return self.g_plus.shape[0] + agg
+
+    @property
+    def row_tiles(self) -> int:
+        return self.lmap.row_tiles
+
+    @property
+    def col_tiles(self) -> int:
+        return self.lmap.col_tiles
+
+
+@dataclasses.dataclass
+class Placement:
+    stages: list[Stage]
+    dims: tuple[int, ...]
+    rows: int
+    cols: int
+    nmap: NetworkMap
+
+    @property
+    def n_cores(self) -> int:
+        """Placed physical cores.  With loopback sharing, time-multiplexed
+        layers occupy the same core, so this is the mapper's placed count
+        (the per-stage stacks still execute independently in time)."""
+        return self.nmap.cores
+
+    def set_stage_stacks(self, index: int, g_plus: jax.Array,
+                         g_minus: jax.Array) -> None:
+        self.stages[index].g_plus = g_plus
+        self.stages[index].g_minus = g_minus
+
+    def extract_params(self) -> list[dict[str, jax.Array]]:
+        """Stacks -> per-layer {"g_plus", "g_minus"} dicts (inverse of
+        place_network's tiling, bias row and padding stripped)."""
+        out = []
+        for st in self.stages:
+            F, O = st.lmap.fan_in, st.lmap.fan_out
+            r, c = st.row_tiles, st.col_tiles
+            gp = _untile(st.g_plus, r, c, st.rows, st.cols)[1:F + 1, :O]
+            gm = _untile(st.g_minus, r, c, st.rows, st.cols)[1:F + 1, :O]
+            out.append({"g_plus": gp, "g_minus": gm})
+        return out
+
+
+def _tile(g: jax.Array, r: int, c: int, rows: int, cols: int) -> jax.Array:
+    """(r*rows, c*cols) padded matrix -> (r*c, rows, cols) core stack."""
+    return (g.reshape(r, rows, c, cols).transpose(0, 2, 1, 3)
+             .reshape(r * c, rows, cols))
+
+
+def _untile(stack: jax.Array, r: int, c: int, rows: int,
+            cols: int) -> jax.Array:
+    return (stack.reshape(r, c, rows, cols).transpose(0, 2, 1, 3)
+                 .reshape(r * rows, c * cols))
+
+
+def _pad_layer(g: jax.Array, r: int, c: int, rows: int,
+               cols: int) -> jax.Array:
+    """Place a (fan_in, fan_out) matrix into the (r*rows, c*cols) core grid:
+    bias row at row 0 (zero conductance), zero-padding elsewhere."""
+    F, O = g.shape
+    out = jnp.zeros((r * rows, c * cols), g.dtype)
+    return out.at[1:F + 1, :O].set(g)
+
+
+def tile_inputs(x: jax.Array, r: int, c: int, rows: int,
+                bias_value: float = 0.0) -> jax.Array:
+    """(M, fan_in) activations -> (r*c, M, rows) per-core input slabs.
+
+    Core ``i*c + j`` receives fan-in tile ``i`` (all cores of one fan-in
+    tile see the same rows — the routing network fans a neuron output to
+    every consuming core).  Row 0 of tile 0 is the bias line, driven at
+    ``bias_value`` (0: the repo's layers are bias-free; the row is
+    provisioned but silent)."""
+    M, F = x.shape
+    xb = jnp.concatenate(
+        [jnp.full((M, 1), bias_value, x.dtype), x,
+         jnp.zeros((M, r * rows - F - 1), x.dtype)], axis=1)
+    xt = xb.reshape(M, r, rows).transpose(1, 0, 2)      # (r, M, rows)
+    return jnp.repeat(xt, c, axis=0)                    # (r*c, M, rows)
+
+
+def untile_outputs(ys: jax.Array, r: int, c: int, fan_out: int) -> jax.Array:
+    """(r*c, M, cols) per-core partial DPs -> (M, fan_out) exact-aggregated
+    dot products (sum over fan-in tiles, concat over fan-out tiles)."""
+    T, M, cols = ys.shape
+    part = ys.reshape(r, c, M, cols).sum(axis=0)        # (c, M, cols)
+    return part.transpose(1, 0, 2).reshape(M, c * cols)[:, :fan_out]
+
+
+def _agg_pattern(r: int, cols: int, dtype) -> jax.Array:
+    """Unit-conductance block pattern of one aggregation core: input line
+    ``i*cols + n`` (sub-neuron partial i of neuron n) feeds neuron n."""
+    eye = jnp.eye(cols, dtype=dtype)
+    return jnp.tile(eye, (r, 1))                        # (r*cols, cols)
+
+
+def place_layer(index: int, params: dict[str, jax.Array], lmap: LayerMap,
+                rows: int, cols: int) -> Stage:
+    gp, gm = params["g_plus"], params["g_minus"]
+    r, c = lmap.row_tiles, lmap.col_tiles
+    agg_p = agg_m = None
+    if r > 1:
+        # Fig. 14 aggregation cores: one per fan-out tile, unit weights.
+        pat = _agg_pattern(r, cols, gp.dtype)
+        agg_p = jnp.broadcast_to(pat, (c,) + pat.shape)
+        agg_m = jnp.zeros_like(agg_p)
+    return Stage(
+        index=index, lmap=lmap, rows=rows, cols=cols,
+        g_plus=_tile(_pad_layer(gp, r, c, rows, cols), r, c, rows, cols),
+        g_minus=_tile(_pad_layer(gm, r, c, rows, cols), r, c, rows, cols),
+        agg_plus=agg_p, agg_minus=agg_m)
+
+
+def place_network(layers: list[dict[str, jax.Array]],
+                  nmap: NetworkMap | None = None,
+                  rows: int = CORE_ROWS, cols: int = CORE_COLS) -> Placement:
+    """Materialize per-layer conductance dicts onto the simulated core grid.
+
+    ``nmap`` defaults to the unshared `map_network` placement of the layer
+    dims; pass a `map_network(..., share_small_layers=True)` map to model
+    loopback packing (same stage execution, fewer placed cores)."""
+    dims = [int(layers[0]["g_plus"].shape[0])] + \
+           [int(p["g_plus"].shape[1]) for p in layers]
+    if nmap is None:
+        from repro.core.mapping import map_network
+        nmap = map_network(dims, rows, cols)
+    if len(nmap.layers) != len(layers):
+        raise ValueError(f"NetworkMap has {len(nmap.layers)} layers, "
+                         f"params have {len(layers)}")
+    stages = []
+    for i, (p, lm) in enumerate(zip(layers, nmap.layers)):
+        got = tuple(p["g_plus"].shape)
+        if got != (lm.fan_in, lm.fan_out):
+            raise ValueError(f"layer {i}: params {got} != map "
+                             f"({lm.fan_in}, {lm.fan_out})")
+        if lm.row_tiles > rows:
+            # beyond this the mapper's agg core count (ceil(r/rows) *
+            # col_tiles) stops collapsing to col_tiles and the stacks
+            # below would disagree with the priced placement.
+            raise NotImplementedError(
+                f"layer {i}: {lm.row_tiles} fan-in tiles need multi-level "
+                f"aggregation, which neither the mapper nor the sim models")
+        stages.append(place_layer(i, p, lm, rows, cols))
+    return Placement(stages=stages, dims=tuple(dims), rows=rows, cols=cols,
+                     nmap=nmap)
