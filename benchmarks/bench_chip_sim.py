@@ -40,18 +40,24 @@ def main() -> None:
         wall = common.time_call(
             lambda: chip.infer(x, count=False), iters=5, warmup=1)
         common.row(f"sim.{app}.wall", wall / STREAM_SAMPLES,
-                   f"host us/sample, {chip.placement.n_cores} cores")
+                   f"host us/sample, {chip.placement.n_cores} cores",
+                   config=f"dims={'x'.join(map(str, dims))}",
+                   samples_per_s=1e6 * STREAM_SAMPLES / wall)
 
         chip.infer_stream(x)
         chip.train_step(x[:1], jnp.tile(tgt, (1, 1)), lr=0.1)
         rep = chip.report()
         for r in rep.rows():
-            common.row(r["name"], r["us_per_call"], r["derived"])
+            common.row(r["name"], r["us_per_call"], r["derived"],
+                       config=r["config"],
+                       samples_per_s=r["samples_per_s"],
+                       joules_per_sample=r["joules_per_sample"])
 
         xval = rep.compare_hw(hw.network_cost(app, dims))
         worst = max(xval.values())
         common.row(f"sim.{app}.xval", worst * 100.0,
-                   "worst rel err % vs hw_model (contract <=1)")
+                   "worst rel err % vs hw_model (contract <=1)",
+                   config=f"dims={'x'.join(map(str, dims))}")
         assert worst <= 0.01, (app, xval)
 
 

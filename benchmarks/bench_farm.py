@@ -1,0 +1,66 @@
+"""Chip-farm benchmark: aggregate samples/s and J/sample vs chip count.
+
+Suite key ``farm`` -> BENCH_farm.json.  For each chip count the same
+request stream is served through the pipelined farm front-end and one
+data-parallel training step runs with reconciled pulse updates; rows
+carry the *simulated* farm throughput and energy (measured counters, the
+quantities `hw_model.farm_cost` cross-validates) plus the host wall time
+of the simulator itself.  The serve throughput must grow monotonically
+with the chip count — asserted here, which is what makes BENCH_farm.json
+a scaling claim rather than a log.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import hw_model as hw
+from repro.sim.cluster import build_farm
+
+APP = "kdd_anomaly"
+CHIP_COUNTS = (1, 2, 4)
+REQUESTS = 16
+
+
+def main() -> None:
+    dims = hw.PAPER_NETWORKS[APP]
+    x = jax.random.uniform(jax.random.PRNGKey(1), (REQUESTS, dims[0]),
+                           minval=-0.5, maxval=0.5)
+    tgt = jax.random.uniform(jax.random.PRNGKey(2), (REQUESTS, dims[-1]),
+                             minval=-0.5, maxval=0.5)
+    g_infer = hw.gpu_cost(list(dims), train=False)
+
+    serve_sps = []
+    for chips in CHIP_COUNTS:
+        farm = build_farm(APP, chips, seed=0)
+        wall = common.time_call(lambda: farm.serve(x)[0], iters=3, warmup=1)
+        farm.train_step(x, tgt, lr=0.1)
+        rep = farm.report()
+        xval = {**rep.compare_chip_sum(), **rep.compare_hw()}
+        worst = max(xval.values())
+        assert worst <= 0.01, (chips, xval)
+
+        cfg = f"chips={chips},dims={'x'.join(map(str, dims))}"
+        common.row(f"farm.{APP}.c{chips}.wall", wall / REQUESTS,
+                   "host us/request (simulator wall clock)", config=cfg,
+                   samples_per_s=1e6 * REQUESTS / wall)
+        for r in rep.rows():
+            common.row(r["name"], r["us_per_call"], r["derived"],
+                       config=r["config"],
+                       samples_per_s=r["samples_per_s"],
+                       joules_per_sample=r["joules_per_sample"])
+        common.row(f"farm.{APP}.c{chips}.vs_k20",
+                   g_infer.time_us,
+                   f"serve_speedup={g_infer.time_us * rep.serve_samples_per_s / 1e6:.1f}x "
+                   f"energy_eff={g_infer.energy_j / rep.serve_j_per_sample:.0f}x",
+                   config=cfg,
+                   samples_per_s=rep.serve_samples_per_s,
+                   joules_per_sample=rep.serve_j_per_sample)
+        serve_sps.append(rep.serve_samples_per_s)
+
+    assert all(b > a for a, b in zip(serve_sps, serve_sps[1:])), \
+        f"farm serve throughput not monotonic in chip count: {serve_sps}"
+
+
+if __name__ == "__main__":
+    main()

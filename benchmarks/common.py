@@ -21,11 +21,28 @@ def time_call(fn, *args, iters: int = 10, warmup: int = 2, **kw) -> float:
 
 ROWS: list[dict] = []
 
+# Every BENCH_*.json row carries these keys so the perf trajectory stays
+# machine-readable across suites (validated by tests/test_bench_schema.py
+# and the CI schema step).
+REQUIRED_ROW_KEYS = ("name", "config", "samples_per_s", "joules_per_sample")
 
-def row(name: str, us_per_call: float, derived: str = "") -> str:
+
+def row(name: str, us_per_call: float, derived: str = "", *,
+        config: str = "", samples_per_s: float = 0.0,
+        joules_per_sample: float = 0.0) -> str:
+    """Record one benchmark row.
+
+    ``samples_per_s`` must be passed explicitly when the row has a real
+    per-SAMPLE rate — a call may cover a whole batch, so deriving it from
+    ``us_per_call`` would mislabel calls/s as samples/s.  It stays 0.0
+    (meaning "not a throughput row") otherwise; ``joules_per_sample``
+    likewise stays 0.0 for host-side timings with no simulated energy."""
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line)
-    ROWS.append({"name": name, "us_per_call": round(us_per_call, 2),
+    ROWS.append({"name": name, "config": config,
+                 "us_per_call": round(us_per_call, 2),
+                 "samples_per_s": round(samples_per_s, 2),
+                 "joules_per_sample": joules_per_sample,
                  "derived": derived})
     return line
 

@@ -50,6 +50,17 @@ GPU_LAUNCH_US_PER_PASS = 10.0      # assumption: kernel launch + HBM round
 
 ADC_BITS_OUT = 3
 
+# ----- chip-farm host link (NOT in the paper — DESIGN.md §6) ---------------
+# The multi-chip farm (repro.sim.cluster) hangs N chips off a host over a
+# serial link.  The paper prices only the per-chip TSV IO; the farm adds a
+# host-side hop.  Assumptions, documented here because the paper is silent:
+# a PCIe-class lane per chip (16 Gbit/s effective) at typical off-package
+# SerDes energy (5 pJ/bit — two orders above the 3D-stacked TSV, which is
+# the point of keeping training traffic in 8-bit codes).
+HOST_LINK_GBPS = 16.0              # effective per-chip host-link bandwidth
+HOST_LINK_PJ_PER_BIT = 5.0         # off-package SerDes energy per bit
+ERR_BITS_LINK = 8                  # reconciliation codes (paper III.F)
+
 
 @dataclasses.dataclass(frozen=True)
 class PhaseCost:
@@ -85,7 +96,9 @@ def core_step_energy_j(time_us: float, power_mw: float, cores: int) -> float:
 
 def network_cost(name: str, dims: list[int], *, pretraining: bool = False,
                  input_bits: int = 8,
-                 share_small_layers: bool = False) -> AppCost:
+                 share_small_layers: bool = False,
+                 rows: int | None = None, cols: int | None = None
+                 ) -> AppCost:
     """Cost one training iteration + one recognition pass for a network.
 
     Training = forward + backward + update on every layer's cores, phases
@@ -96,11 +109,15 @@ def network_cost(name: str, dims: list[int], *, pretraining: bool = False,
     chip (``repro.sim.report``); ``tests/test_chip_sim.py`` pins the two to
     1% agreement (DESIGN.md "Virtual chip" cross-validation contract).
     """
+    from repro.core.mapping import CORE_COLS, CORE_ROWS
+    rows = CORE_ROWS if rows is None else rows
+    cols = CORE_COLS if cols is None else cols
     nmap: NetworkMap = (
-        map_autoencoder_pretraining(dims,
+        map_autoencoder_pretraining(dims, rows, cols,
                                     share_small_layers=share_small_layers)
         if pretraining
-        else map_network(dims, share_small_layers=share_small_layers))
+        else map_network(dims, rows, cols,
+                         share_small_layers=share_small_layers))
     n_layers = len(nmap.layers)
 
     route_us = nmap.routed_outputs / ROUTING_CLOCK_HZ * 1e6
@@ -130,6 +147,108 @@ def network_cost(name: str, dims: list[int], *, pretraining: bool = False,
         io_energy_train_j=_io_energy(io_bits * 2 + out_bits),
         io_energy_infer_j=_io_energy(io_bits + out_bits),
     )
+
+
+def pipeline_beat_us(slot_cycles: int = 100) -> float:
+    """Steady-state recognition beat (Table IV): one crossbar evaluation
+    slot plus one static routing slot of ``slot_cycles`` cycles — 0.27 +
+    100/200 MHz = 0.77 us for the paper geometry, every application."""
+    return FWD_US + slot_cycles / ROUTING_CLOCK_HZ * 1e6
+
+
+# ----- chip farm: N chips under one host (DESIGN.md §6) --------------------
+
+@dataclasses.dataclass(frozen=True)
+class FarmCost:
+    """Analytic cost of an N-chip data-parallel farm.
+
+    Serving: each chip streams one sample per pipeline beat; the host link
+    carries the sample in and the ADC codes out.  Training: each chip runs
+    the three phases on its batch shard, then the host link reconciles the
+    pulse updates (local outer-product codes up, reconciled pulses down,
+    ``ERR_BITS_LINK`` bits per placed crossbar cell each way)."""
+    name: str
+    n_chips: int
+    chip: AppCost
+    beat_us: float
+    serve_samples_per_s: float        # aggregate steady-state throughput
+    serve_j_per_sample: float         # chip core + TSV + host-link energy
+    host_bits_infer: int              # host-link bits per served sample
+    host_bits_train: int              # host-link bits per training sample
+    reconcile_bits: int               # per chip per step, both directions
+    host_link_utilization: float      # serve: bits-time / beat per chip;
+                                      # > 1 flags a link-bound farm (the
+                                      # beat-rate is then unachievable)
+    train_step_us: float              # one farm step (batch_per_chip each)
+    train_j_per_sample: float         # per global sample, incl. host link
+
+    @property
+    def serve_w(self) -> float:
+        return self.serve_j_per_sample * self.serve_samples_per_s
+
+
+def _host_link_us(bits: float) -> float:
+    return bits / (HOST_LINK_GBPS * 1e9) * 1e6
+
+
+def _host_link_j(bits: float) -> float:
+    return bits * HOST_LINK_PJ_PER_BIT * 1e-12
+
+
+def farm_cost(name: str, dims: list[int], n_chips: int, *,
+              batch_per_chip: int = 1, input_bits: int = 8,
+              share_small_layers: bool = False,
+              rows: int | None = None, cols: int | None = None) -> FarmCost:
+    """Price an N-chip farm serving and training ``dims``.
+
+    The same quantities are reproduced from *measured* counters by the
+    farm simulator (``repro.sim.cluster`` / ``sim.report.FarmReport``);
+    ``tests/test_farm.py`` pins the two to 1% agreement, extending the
+    single-chip cross-validation contract (DESIGN.md §5.3) to the farm.
+    """
+    from repro.core.mapping import CORE_COLS, CORE_ROWS
+    rows = CORE_ROWS if rows is None else rows
+    cols = CORE_COLS if cols is None else cols
+    chip = network_cost(name, dims, input_bits=input_bits,
+                        share_small_layers=share_small_layers,
+                        rows=rows, cols=cols)
+    nmap = map_network(dims, rows, cols,
+                       share_small_layers=share_small_layers)
+    beat = pipeline_beat_us(cols)
+
+    # serving: per-sample host traffic mirrors the chip's TSV convention
+    # (input sample in, output ADC codes back).  The farm simulator's
+    # serving loop retires one sample per chip per beat and does NOT model
+    # host-link stalls, so the analytic side prices the same idealization:
+    # throughput is beat-limited, and a link-bound configuration is
+    # *flagged* by host_link_utilization > 1 rather than silently
+    # re-priced (keeps the <=1% sim<->model contract exact for all nets).
+    host_infer = dims[0] * input_bits + dims[-1] * ADC_BITS_OUT
+    link_us = _host_link_us(host_infer)
+    serve_sps = n_chips * 1e6 / beat
+    # steady-state energy/sample: every stage busy -> the full forward core
+    # energy is spent per retired sample; TSV + host link add transport.
+    serve_j = chip.infer.energy_j + chip.io_energy_infer_j \
+        + _host_link_j(host_infer)
+
+    # training: dw codes for every placed main-grid cell, both directions.
+    cells = sum(lm.row_tiles * lm.col_tiles for lm in nmap.layers) \
+        * rows * cols
+    reconcile_bits = 2 * cells * ERR_BITS_LINK
+    host_train = 2 * dims[0] * input_bits + dims[-1] * ADC_BITS_OUT
+    train_step_us = batch_per_chip * chip.train.time_us \
+        + _host_link_us(reconcile_bits)
+    global_batch = n_chips * batch_per_chip
+    train_j = chip.train.energy_j + chip.io_energy_train_j \
+        + _host_link_j(host_train) \
+        + n_chips * _host_link_j(reconcile_bits) / global_batch
+    return FarmCost(
+        name=name, n_chips=n_chips, chip=chip, beat_us=beat,
+        serve_samples_per_s=serve_sps, serve_j_per_sample=serve_j,
+        host_bits_infer=host_infer, host_bits_train=host_train,
+        reconcile_bits=reconcile_bits,
+        host_link_utilization=link_us / beat,
+        train_step_us=train_step_us, train_j_per_sample=train_j)
 
 
 def gpu_cost(dims: list[int], *, train: bool) -> PhaseCost:

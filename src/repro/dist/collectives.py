@@ -66,6 +66,61 @@ def compressed_grad_mean(grads, mesh: Mesh, axis_names: tuple[str, ...],
     return jax.tree.unflatten(treedef, out)
 
 
+def farm_reduce_sum(contrib: jax.Array, *, axis_name: str | None = None,
+                    chip_axis: int = 0, mode: str = "none",
+                    err_bits: int = 8) -> jax.Array:
+    """Reconcile per-chip pulse-update contributions into one farm update.
+
+    The chip farm (repro.sim.cluster) trains data-parallel: every chip
+    computes a LOCAL batch-summed outer product (Eq. 6) and the host link
+    carries the contributions to a single reconciled update — the paper's
+    pulse discipline applied once, on the SUM, so the farm's replicas stay
+    bitwise in lockstep with a serial chip (DESIGN.md §6).
+
+    Inside ``shard_map`` pass ``axis_name`` (psum over the mesh axis);
+    outside, ``contrib`` carries an explicit chip axis (``chip_axis``) that
+    is summed away.
+
+    mode "none": exact f32 sum (the default — farm == serial exactly).
+    mode "int8": each chip's contribution rides the host link as 8-bit
+                 sign-magnitude codes with its OWN full-scale (paper III.F
+                 step 1 per chip) — quarter traffic, error bounded per
+                 chip, so a quiet chip's update survives next to a loud
+                 one.  Inside shard_map the scale is per shard, which
+                 equals per chip only at one chip per device.
+    """
+    if mode == "int8":
+        from repro.core import quantization as q
+
+        def code(g):
+            return q.error_quantize(g, err_bits).dequantize()
+
+        if axis_name is not None:
+            contrib = code(contrib)
+        else:
+            contrib = jax.vmap(code, in_axes=chip_axis,
+                               out_axes=chip_axis)(contrib)
+    elif mode != "none":
+        raise ValueError(f"unknown farm reduction mode: {mode!r}")
+    if axis_name is not None:
+        return jax.lax.psum(contrib, axis_name)
+    return jnp.sum(contrib, axis=chip_axis)
+
+
+def farm_max(x: jax.Array, *, axis_name: str | None = None,
+             chip_axis: int = 0) -> jax.Array:
+    """Farm-wide max (keeps the reduced axis as size 1 outside shard_map).
+
+    Used for the shared error full-scale: the paper's 8-bit error ADC has
+    ONE full-scale per tensor, so the farm must agree on max|delta| across
+    all chips before quantizing — otherwise each chip would discretize its
+    shard on a different grid and the replicas would drift from the serial
+    reference."""
+    if axis_name is not None:
+        return jax.lax.pmax(x, axis_name)
+    return jnp.max(x, axis=chip_axis, keepdims=True)
+
+
 def dp_train_step_fn(loss_fn: Callable, opt, mesh: Mesh, *,
                      compression: str = "int8") -> Callable:
     """Jit'd pure-DP train step with compressed gradient all-reduce.

@@ -373,6 +373,31 @@ def pulse_update(g_plus, g_minus, x, delta, *, lr: float,
 # execute as ONE vmapped Pallas call: vmap lifts the core axis into the
 # kernel grid, so the stage is a single fused dispatch, not a Python loop
 # over cores (DESIGN.md "Virtual chip").
+#
+# Every stacked entry point also accepts ONE extra leading *chip* axis —
+# (C, T, M, K) instead of (T, M, K) — for the multi-chip farm
+# (repro.sim.cluster, DESIGN.md §6): the chip axis folds into the core
+# stack, so a whole farm's pipeline beat is still a single fused dispatch.
+
+
+def _fold_chip_axis(*arrays):
+    """Fold an optional leading chip axis into the core-stack axis.
+
+    All arrays must share ndim (3 = no chip axis, 4 = (C, T, ...)).
+    Returns (folded_arrays, unfold) where ``unfold(y)`` restores the chip
+    axis on a (C*T, ...) result."""
+    ndims = {a.ndim for a in arrays}
+    if ndims == {3}:
+        return arrays, lambda y: y
+    if ndims != {4}:
+        raise ValueError(f"stacked operands must all be rank 3 or all "
+                         f"rank 4, got ndims {sorted(ndims)}")
+    C = arrays[0].shape[0]
+    if any(a.shape[0] != C for a in arrays):
+        raise ValueError("mismatched chip axis across stacked operands")
+    folded = tuple(a.reshape((a.shape[0] * a.shape[1],) + a.shape[2:])
+                   for a in arrays)
+    return folded, lambda y: y.reshape((C, y.shape[0] // C) + y.shape[1:])
 
 
 @partial(jax.jit, static_argnames=("activation", "adc_bits", "adc_range",
@@ -399,14 +424,17 @@ def crossbar_fwd_stacked(xs, g_plus, g_minus, *, activation: bool = False,
     xs (T, M, K); g± (T, K, N) -> (T, M, N).  Core t computes
     ``xs[t] @ (g_plus[t] - g_minus[t])`` — the per-stage dispatch of the
     virtual chip, where slice t is one physical core's conductance array.
+    A leading chip axis — xs (C, T, M, K); g± (C, T, K, N) — folds into the
+    core stack, so a whole farm executes as the same single dispatch.
     """
     interpret = _default_interpret() if interpret is None else interpret
+    (xs, g_plus, g_minus), unfold = _fold_chip_axis(xs, g_plus, g_minus)
     T, M, K = xs.shape
     N = g_plus.shape[2]
     bm, bk, bn = _default_blocks(M, K, N)
-    return _fwd_stacked_call(xs, g_plus, g_minus, activation=activation,
-                             adc_bits=adc_bits, adc_range=adc_range,
-                             bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return unfold(_fwd_stacked_call(
+        xs, g_plus, g_minus, activation=activation, adc_bits=adc_bits,
+        adc_range=adc_range, bm=bm, bk=bk, bn=bn, interpret=interpret))
 
 
 @partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
@@ -428,14 +456,46 @@ def crossbar_bwd_stacked(dys, g_plus, g_minus, *,
 
     dys (T, M, N); g± (T, K, N) -> (T, M, K).  The virtual chip drives each
     core's error through its own conductances (Eq. 7 / Fig. 9), all cores of
-    a stage in one call.
+    a stage in one call.  A leading chip axis folds like
+    :func:`crossbar_fwd_stacked`.
     """
     interpret = _default_interpret() if interpret is None else interpret
+    (dys, g_plus, g_minus), unfold = _fold_chip_axis(dys, g_plus, g_minus)
     T, M, N = dys.shape
     K = g_plus.shape[1]
     bm, bk, bn = _default_blocks(M, K, N)
-    return _bwd_stacked_call(dys, g_plus, g_minus, bm=bm, bk=bk, bn=bn,
-                             interpret=interpret)
+    return unfold(_bwd_stacked_call(dys, g_plus, g_minus, bm=bm, bk=bk,
+                                    bn=bn, interpret=interpret))
+
+
+@partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def _dw_stacked_call(xs, dys, *, bm, bk, bn, interpret):
+    T, M, K = xs.shape
+    N = dys.shape[2]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+    call = partial(xbk.crossbar_dw_kernel, bm=bm, bk=bk, bn=bn,
+                   interpret=interpret)
+    dw = jax.vmap(call)(_pad_to(xs, (T, Mp, Kp)),
+                        _pad_to(dys, (T, Mp, Np)))
+    return dw[:, :K, :N]
+
+
+def crossbar_dw_stacked(xs, dys, *, interpret: bool | None = None):
+    """Batched multi-core weight gradient: dw[t] = xs[t]^T @ dys[t]
+    (batch-summed outer products, the paper's Eq. 6 per core).
+
+    xs (T, M, K); dys (T, M, N) -> (T, K, N).  A leading chip axis folds
+    like :func:`crossbar_fwd_stacked`; the farm uses this to compute each
+    chip's LOCAL update contribution in one dispatch before the pulse
+    reconciliation all-reduce (repro.dist.collectives.farm_reduce_sum).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    (xs, dys), unfold = _fold_chip_axis(xs, dys)
+    T, M, K = xs.shape
+    N = dys.shape[2]
+    bm, bk, bn = _default_blocks(M, K, N)
+    return unfold(_dw_stacked_call(xs, dys, bm=bm, bk=bk, bn=bn,
+                                   interpret=interpret))
 
 
 @partial(jax.jit, static_argnames=("lr", "max_dw", "levels", "w_max",
@@ -468,15 +528,21 @@ def pulse_update_stacked(g_plus, g_minus, xs, deltas, *, lr: float,
 
     Each core's local outer product + pulse discretization + clipping runs
     in its own kernel grid cell; the whole stage updates in one call — this
-    is the virtual chip's update phase writing G± in place.
+    is the virtual chip's update phase writing G± in place.  A leading chip
+    axis folds like :func:`crossbar_fwd_stacked` (independent per-chip
+    updates; the farm's *reconciled* update path goes through
+    :func:`crossbar_dw_stacked` + collectives instead).
     """
     interpret = _default_interpret() if interpret is None else interpret
+    (g_plus, g_minus, xs, deltas), unfold = _fold_chip_axis(
+        g_plus, g_minus, xs, deltas)
     T, M, K = xs.shape
     N = deltas.shape[2]
     bm, bk, bn = _default_blocks(M, K, N)
-    return _pulse_stacked_call(g_plus, g_minus, xs, deltas, lr=lr,
-                               max_dw=max_dw, levels=levels, w_max=w_max,
-                               bm=bm, bk=bk, bn=bn, interpret=interpret)
+    gp2, gm2 = _pulse_stacked_call(g_plus, g_minus, xs, deltas, lr=lr,
+                                   max_dw=max_dw, levels=levels, w_max=w_max,
+                                   bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return unfold(gp2), unfold(gm2)
 
 
 # ---------------------------------------------------------------------------

@@ -5,6 +5,12 @@ and generation state; finished slots are refilled from the queue.  The
 decode step is one jit'd graph reused across requests (static shapes), so
 the HLO collective schedule is fixed — the serving-side analogue of the
 paper's static routing.
+
+:class:`RequestQueue` is the shared front-end discipline: a FIFO of
+fixed-shape requests with per-slot refill, used both by the LM
+:class:`BatchedServer` pattern here and by the chip farm's pipelined
+serving loop (``repro.sim.cluster.FarmServer``, DESIGN.md §6), where each
+chip's stage-0 slot refills from the queue every pipeline beat.
 """
 from __future__ import annotations
 
@@ -23,6 +29,57 @@ class ServeStats:
     steps: int = 0
     tokens_out: int = 0
     requests_done: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: a fixed-shape input and its queue id."""
+    rid: int
+    x: Any                      # (features,) or (m, features) array
+
+
+class RequestQueue:
+    """FIFO request queue with completion tracking (per-slot refill).
+
+    ``pop`` hands the next request to a free pipeline slot; ``complete``
+    records its result.  Results are retrievable in request order, so the
+    server's routing (which chip served which request) never reorders the
+    client-visible stream."""
+
+    def __init__(self, inputs: Any | None = None):
+        from collections import deque
+        self._pending: Any = deque()
+        self._results: dict[int, Any] = {}
+        self._next_rid = 0
+        self.submitted = 0
+        self.completed = 0
+        if inputs is not None:
+            for x in inputs:
+                self.submit(x)
+
+    def submit(self, x: Any) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(Request(rid, x))
+        self.submitted += 1
+        return rid
+
+    def pop(self) -> Request | None:
+        return self._pending.popleft() if self._pending else None
+
+    def complete(self, rid: int, result: Any) -> None:
+        if rid in self._results:
+            raise ValueError(f"request {rid} completed twice")
+        self._results[rid] = result
+        self.completed += 1
+
+    @property
+    def drained(self) -> bool:
+        return not self._pending and self.completed == self.submitted
+
+    def results(self) -> list[Any]:
+        """Completed results in submission order."""
+        return [self._results[r] for r in sorted(self._results)]
 
 
 class BatchedServer:

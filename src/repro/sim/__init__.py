@@ -16,8 +16,11 @@ Modules:
   chip     VirtualChip: infer / pipelined streaming / train_step + counters
   report   SimReport: counters -> time/energy, hw_model cross-validation
   faults   memristor stuck-on/stuck-off masks + per-core variation injection
+  cluster  ChipFarm / FarmServer: N-chip data-parallel farm + serving
+           front-end, host-link accounting (DESIGN.md §6)
 """
 from repro.sim.chip import VirtualChip  # noqa: F401
+from repro.sim.cluster import ChipFarm, FarmServer, build_farm  # noqa: F401
 from repro.sim.faults import inject_faults  # noqa: F401
 from repro.sim.placer import Placement, place_network  # noqa: F401
-from repro.sim.report import SimReport  # noqa: F401
+from repro.sim.report import FarmReport, SimReport  # noqa: F401

@@ -46,7 +46,8 @@ from repro.core.mapping import map_network
 from repro.core import hw_model as hw
 from repro.kernels import ops as kernel_ops
 from repro.sim.noc import NocTracker
-from repro.sim.placer import Placement, Stage, place_network, tile_inputs
+from repro.sim.placer import (Placement, Stage, place_network,
+                              stage_dot_products, tile_inputs)
 from repro.sim.report import PhaseCounters, SimReport
 
 
@@ -102,24 +103,11 @@ class VirtualChip:
 
     def _stage_dp(self, st: Stage, h: jax.Array) -> jax.Array:
         """Run one stage's core stack on a (M, fan_in) input wave; returns
-        the exact-aggregated (M, fan_out) dot products."""
-        r, c = st.row_tiles, st.col_tiles
-        M = h.shape[0]
-        xs = tile_inputs(h, r, c, st.rows)
-        ys = kernel_ops.crossbar_fwd_stacked(xs, st.g_plus, st.g_minus)
-        if r > 1:
-            # Fig. 14: sub-neuron partials cross the NoC to the aggregation
-            # cores, which sum them through unit conductances — a second
-            # batched call inside the same pipeline slot.
-            u = (ys.reshape(r, c, M, st.cols).transpose(1, 2, 0, 3)
-                   .reshape(c, M, r * st.cols))
-            dpt = kernel_ops.crossbar_fwd_stacked(u, st.agg_plus,
-                                                  st.agg_minus)
-            dp = dpt.transpose(1, 0, 2).reshape(M, c * st.cols)
-        else:
-            dp = (ys.reshape(r, c, M, st.cols).sum(axis=0)
-                    .transpose(1, 0, 2).reshape(M, c * st.cols))
-        return dp[:, :st.lmap.fan_out]
+        the exact-aggregated (M, fan_out) dot products.  The tile /
+        Fig.-14 aggregation discipline lives in `placer.stage_dot_products`
+        (shared with the farm)."""
+        return stage_dot_products(st, h, st.g_plus, st.g_minus,
+                                  kernel_ops.crossbar_fwd_stacked)
 
     def _count_stage(self, counters: PhaseCounters, st: Stage,
                      samples: int) -> None:

@@ -143,6 +143,63 @@ def tile_inputs(x: jax.Array, r: int, c: int, rows: int,
     return jnp.repeat(xt, c, axis=0)                    # (r*c, M, rows)
 
 
+def fold_subneuron_partials(ys: jax.Array, st: Stage) -> jax.Array:
+    """(C, r*c, M, cols) main-grid outputs of a fan-in-split stage ->
+    (C, c, M, r*cols) aggregation-core input lines (Fig. 14: partial ``i``
+    of neuron ``n`` drives line ``i*cols + n``)."""
+    C, M = ys.shape[0], ys.shape[2]
+    r, c = st.row_tiles, st.col_tiles
+    return (ys.reshape(C, r, c, M, st.cols).transpose(0, 2, 3, 1, 4)
+              .reshape(C, c, M, r * st.cols))
+
+
+def stage_dp_from_outputs(ys: jax.Array, st: Stage,
+                          agg_out: jax.Array | None = None) -> jax.Array:
+    """Core outputs -> (C, M, fan_out) stage dot products.
+
+    ``ys`` is the (C, r*c, M, cols) main-grid output; fan-in-split stages
+    pass the (C, c, M, cols) aggregation output instead of summing."""
+    C, M = ys.shape[0], ys.shape[2]
+    r, c = st.row_tiles, st.col_tiles
+    if st.row_tiles > 1:
+        dp = agg_out.transpose(0, 2, 1, 3).reshape(C, M, c * st.cols)
+    else:
+        dp = (ys.reshape(C, r, c, M, st.cols).sum(axis=1)
+                .transpose(0, 2, 1, 3).reshape(C, M, c * st.cols))
+    return dp[..., :st.lmap.fan_out]
+
+
+def stage_dot_products(st: Stage, h: jax.Array, g_plus: jax.Array,
+                       g_minus: jax.Array, run_fwd) -> jax.Array:
+    """One stage's exact-aggregated dot products — with the two reshape
+    helpers above, the single owner of the tile/aggregate discipline,
+    shared by the serial chip, the farm wave paths, and (helpers only)
+    the farm serving beat, so their numerics cannot drift apart.
+
+    ``h`` is ``(M, fan_in)`` or chip-stacked ``(C, Mc, fan_in)``;
+    ``g±`` match (``(T, rows, cols)`` / ``(C, T, rows, cols)``).
+    ``run_fwd(xs, gp, gm)`` is the stacked forward dispatch (the farm
+    passes its shard_mapped variant).  Fan-in-split stages run the
+    Fig.-14 aggregation as a second dispatch in the same time slot."""
+    chipped = h.ndim == 3
+    if not chipped:
+        h, g_plus, g_minus = h[None], g_plus[None], g_minus[None]
+    r, c = st.row_tiles, st.col_tiles
+    C = h.shape[0]
+    xs = jax.vmap(lambda hh: tile_inputs(hh, r, c, st.rows))(h)
+    ys = run_fwd(xs, g_plus, g_minus)
+    agg_out = None
+    if r > 1:
+        # sub-neuron partials cross the NoC to the aggregation cores,
+        # which sum them through unit conductances.
+        u = fold_subneuron_partials(ys, st)
+        agg_p = jnp.broadcast_to(st.agg_plus, (C,) + st.agg_plus.shape)
+        agg_m = jnp.broadcast_to(st.agg_minus, (C,) + st.agg_minus.shape)
+        agg_out = run_fwd(u, agg_p, agg_m)
+    dp = stage_dp_from_outputs(ys, st, agg_out)
+    return dp if chipped else dp[0]
+
+
 def untile_outputs(ys: jax.Array, r: int, c: int, fan_out: int) -> jax.Array:
     """(r*c, M, cols) per-core partial DPs -> (M, fan_out) exact-aggregated
     dot products (sum over fan-in tiles, concat over fan-out tiles)."""

@@ -74,6 +74,47 @@ class PhaseCounters:
         return hw._io_energy(self.io_bits / max(self.samples, 1))
 
 
+@dataclasses.dataclass
+class HostLinkTracker:
+    """Measured host<->chip traffic of the farm (DESIGN.md §6).
+
+    Counts only — like the NoC tracker, pricing happens at report time with
+    the `hw_model` host-link constants.  ``sample_bits`` is per-direction
+    sample traffic (inputs in, output ADC codes back, mirroring the chip's
+    TSV convention); ``reconcile_bits`` is training-update reconciliation
+    traffic (local dw codes up + reconciled pulses down, all chips)."""
+    gbps: float = hw.HOST_LINK_GBPS
+    pj_per_bit: float = hw.HOST_LINK_PJ_PER_BIT
+    sample_bits: int = 0
+    reconcile_bits: int = 0
+    samples: int = 0
+    steps: int = 0
+
+    def record_samples(self, bits_per_sample: int, samples: int) -> None:
+        self.sample_bits += bits_per_sample * samples
+        self.samples += samples
+
+    def record_reconcile(self, bits: int) -> None:
+        self.reconcile_bits += bits
+        self.steps += 1
+
+    @property
+    def total_bits(self) -> int:
+        return self.sample_bits + self.reconcile_bits
+
+    def time_us(self, bits: float) -> float:
+        return bits / (self.gbps * 1e9) * 1e6
+
+    def energy_j(self, bits: float) -> float:
+        return bits * self.pj_per_bit * 1e-12
+
+    def sample_bits_per_sample(self) -> float:
+        return self.sample_bits / max(self.samples, 1)
+
+    def reconcile_bits_per_step(self) -> float:
+        return self.reconcile_bits / max(self.steps, 1)
+
+
 @dataclasses.dataclass(frozen=True)
 class SimReport:
     """Per-sample measured costs of the virtual chip (one app)."""
@@ -153,18 +194,193 @@ class SimReport:
 
     def rows(self) -> list[dict]:
         """BENCH_sim.json rows (benchmarks/run.py guarded-write path)."""
+        cfg = f"dims={'x'.join(map(str, self.dims))},cores={self.cores}"
         rows = [
-            {"name": f"sim.{self.name}.infer",
+            {"name": f"sim.{self.name}.infer", "config": cfg,
              "us_per_call": round(self.infer_time_us, 4),
+             "samples_per_s": round(1e6 / self.infer_time_us, 2)
+             if self.infer_time_us else 0.0,
+             "joules_per_sample": self.infer_total_j,
              "derived": f"pJ/sample={self.infer_total_j * 1e12:.2f}"},
-            {"name": f"sim.{self.name}.stream",
+            {"name": f"sim.{self.name}.stream", "config": cfg,
              "us_per_call": round(self.beat_us, 4),
+             "samples_per_s": round(self.throughput_sps, 2),
+             "joules_per_sample": self.infer_total_j,
              "derived": (f"samples/s={self.throughput_sps:.0f} "
                          f"link_util={self.link_utilization:.2f}")},
         ]
         if self.train_samples:
             rows.append(
-                {"name": f"sim.{self.name}.train",
+                {"name": f"sim.{self.name}.train", "config": cfg,
                  "us_per_call": round(self.train_time_us, 4),
+                 "samples_per_s": round(1e6 / self.train_time_us, 2)
+                 if self.train_time_us else 0.0,
+                 "joules_per_sample": self.train_total_j,
                  "derived": f"pJ/sample={self.train_total_j * 1e12:.2f}"})
+        return rows
+
+
+@dataclasses.dataclass(frozen=True)
+class FarmReport:
+    """Aggregate measured costs of an N-chip farm (repro.sim.cluster).
+
+    Built by summing the per-chip counters (``per_chip`` holds each chip's
+    own SimReport) plus the farm-level host-link counters; cross-validated
+    two ways (``tests/test_farm.py``): against the summed per-chip reports
+    (internal consistency) and against ``hw_model.farm_cost`` (the §5.3
+    contract extended to the farm)."""
+    name: str
+    n_chips: int
+    dims: tuple[int, ...]
+    per_chip: tuple[SimReport, ...]
+    beat_us: float
+    serve_samples: int                # retired by the serving front-end
+    serve_beats: int
+    serve_samples_per_s: float        # aggregate steady-state (simulated)
+    serve_j_per_sample: float         # core + TSV + host-link, measured
+    train_samples: int                # global samples trained
+    train_steps: int
+    train_step_us: float              # measured per farm step
+    train_j_per_sample: float
+    host_serve_bits: float            # host-link bits per served sample
+    host_train_bits: float            # host-link bits per trained sample
+    host_reconcile_bits: float        # per training step, all chips
+    host_link_utilization: float      # serve-side: link time / beat
+    host_serve_bits_total: int = 0    # raw tracker totals (all samples)
+    host_train_bits_total: int = 0
+    host_reconcile_bits_total: int = 0
+    serve_slot_m: float = 1.0         # samples per serving slot (request
+                                      # microbatch, measured)
+    analytic: "object | None" = None  # farm_cost built with the farm's
+                                      # actual settings (share/bits/grid)
+
+    @property
+    def cores(self) -> int:
+        return sum(r.cores for r in self.per_chip)
+
+    def compare_chip_sum(self) -> dict[str, float]:
+        """Farm aggregates vs the summed per-chip counters.
+
+        Two kinds of check:
+
+        * ``*_lockstep`` — a real invariant: the farm executes replicas in
+          lockstep (train) and bills served samples uniformly, so every
+          chip's per-sample counters must equal chip 0's.  A per-chip
+          counter that drifts (double-billed phase, missed NoC record)
+          fails here.
+        * ``*_energy`` — double-entry bookkeeping: the headline per-sample
+          farm energies re-derived from the RAW per-chip + host-link
+          totals.  This catches asymmetric edits to either side of the
+          aggregation (``ChipFarm.report()`` vs this re-derivation); a
+          bug shared by both formulas is caught by ``compare_hw`` instead,
+          which prices the same quantities from the mapping alone.
+        """
+        link_j = hw.HOST_LINK_PJ_PER_BIT * 1e-12
+
+        def rel(a, b):
+            return abs(a - b) / abs(b) if b else abs(a)
+        out = {}
+        ref = self.per_chip[0]
+        # per-sample quantities are only defined for chips that ran
+        # samples (a short request queue can leave trailing chips idle)
+        busy = [r for r in self.per_chip if r.infer_samples]
+        if busy:
+            out["infer_lockstep"] = max(
+                max(rel(r.infer_time_us, busy[0].infer_time_us),
+                    rel(r.infer_total_j, busy[0].infer_total_j))
+                for r in busy)
+        if self.train_samples:
+            out["train_lockstep"] = max(
+                max(rel(r.train_time_us, ref.train_time_us),
+                    rel(r.train_total_j, ref.train_total_j),
+                    rel(r.train_samples,
+                        self.train_samples / self.n_chips))
+                for r in self.per_chip)
+        # keys are distinct from compare_hw's so merged gate dicts
+        # ({**chip_sum, **hw}) never shadow either check
+        if self.serve_samples:
+            infer_samples = sum(r.infer_samples for r in self.per_chip)
+            chip_total_j = sum(r.infer_total_j * r.infer_samples
+                               for r in self.per_chip)
+            per_sample = (chip_total_j / infer_samples
+                          + self.host_serve_bits_total * link_j
+                          / self.serve_samples)
+            out["serve_energy_vs_chips"] = rel(self.serve_j_per_sample,
+                                               per_sample)
+        if self.train_samples:
+            chip_total_j = sum(r.train_total_j * r.train_samples
+                               for r in self.per_chip)
+            link_total_j = (self.host_train_bits_total
+                            + self.host_reconcile_bits_total) * link_j
+            out["train_energy_vs_chips"] = rel(
+                self.train_j_per_sample,
+                (chip_total_j + link_total_j) / self.train_samples)
+        return out
+
+    def compare_hw(self, cost: "object | None" = None) -> dict[str, float]:
+        """Relative error vs the analytic ``hw_model.farm_cost`` (<= 1%).
+
+        With no explicit ``cost`` the report's own ``analytic`` cost is
+        used — built by ``ChipFarm.report()`` with the farm's actual
+        share_small_layers / input_bits / core-grid settings."""
+        if cost is None:
+            cost = self.analytic
+        if cost is None:
+            per_chip_batch = max(
+                self.train_samples // max(self.train_steps, 1)
+                // self.n_chips, 1)
+            cost = hw.farm_cost(self.name, list(self.dims), self.n_chips,
+                                batch_per_chip=per_chip_batch)
+
+        def rel(a, b):
+            return abs(a - b) / abs(b) if b else abs(a)
+        out = {"beat": rel(self.beat_us, cost.beat_us)}
+        if self.serve_samples:
+            if self.serve_samples_per_s > 0:
+                # capacity was measured over full beats; the analytic
+                # side prices one request slot per chip per beat, so a
+                # measured microbatch scales it
+                out["serve_throughput"] = rel(
+                    self.serve_samples_per_s,
+                    cost.serve_samples_per_s * self.serve_slot_m)
+            out["serve_energy"] = rel(self.serve_j_per_sample,
+                                      cost.serve_j_per_sample)
+            out["host_serve_bits"] = rel(self.host_serve_bits,
+                                         cost.host_bits_infer)
+        if self.train_steps:
+            out["train_step_time"] = rel(self.train_step_us,
+                                         cost.train_step_us)
+            out["train_energy"] = rel(self.train_j_per_sample,
+                                      cost.train_j_per_sample)
+            out["reconcile_bits"] = rel(
+                self.host_reconcile_bits / self.n_chips,
+                cost.reconcile_bits)
+        return out
+
+    def rows(self) -> list[dict]:
+        """BENCH_farm.json rows."""
+        cfg = f"chips={self.n_chips},dims={'x'.join(map(str, self.dims))}"
+        rows = []
+        if self.serve_samples:
+            rows.append({
+                "name": f"farm.{self.name}.c{self.n_chips}.serve",
+                "config": cfg,
+                "us_per_call": round(1e6 / self.serve_samples_per_s, 4),
+                "samples_per_s": round(self.serve_samples_per_s, 2),
+                "joules_per_sample": self.serve_j_per_sample,
+                "derived": (f"beats={self.serve_beats} "
+                            f"link_util={self.host_link_utilization:.3f}"),
+            })
+        if self.train_steps:
+            rows.append({
+                "name": f"farm.{self.name}.c{self.n_chips}.train",
+                "config": cfg,
+                "us_per_call": round(self.train_step_us, 4),
+                "samples_per_s": round(
+                    1e6 * self.train_samples
+                    / max(self.train_step_us * self.train_steps, 1e-12), 2),
+                "joules_per_sample": self.train_j_per_sample,
+                "derived": (f"steps={self.train_steps} "
+                            f"reconcile_bits={self.host_reconcile_bits:.0f}"),
+            })
         return rows

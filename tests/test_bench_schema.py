@@ -1,0 +1,66 @@
+"""Bench artifact schema: BENCH_kernels.json / BENCH_sim.json /
+BENCH_farm.json must share the machine-readable row keys so the perf
+trajectory stays comparable across PRs (ISSUE 3 satellite).  CI runs this
+after the bench suites; locally it validates the committed artifacts.
+"""
+import json
+import os
+
+import pytest
+
+from benchmarks.common import REQUIRED_ROW_KEYS
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUITES = ("kernels", "sim", "farm")
+
+
+def _load(suite):
+    path = os.path.join(REPO, f"BENCH_{suite}.json")
+    if not os.path.exists(path):
+        pytest.skip(f"{path} not generated")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("suite", SUITES)
+def test_bench_record_structure(suite):
+    record = _load(suite)
+    assert record["suite"] == suite
+    assert isinstance(record["rows"], list) and record["rows"]
+    assert "elapsed_s" in record and "backend" in record
+
+
+@pytest.mark.parametrize("suite", SUITES)
+def test_bench_rows_share_required_keys(suite):
+    record = _load(suite)
+    for row in record["rows"]:
+        missing = [k for k in REQUIRED_ROW_KEYS if k not in row]
+        assert not missing, (suite, row.get("name"), missing)
+        assert isinstance(row["name"], str) and row["name"]
+        assert isinstance(row["config"], str)
+        assert isinstance(row["samples_per_s"], (int, float))
+        assert isinstance(row["joules_per_sample"], (int, float))
+        assert row["samples_per_s"] >= 0
+
+
+def test_farm_bench_scales_monotonically():
+    """The ISSUE 3 acceptance criterion, asserted on the artifact itself:
+    serve samples/s grows 1 -> 2 -> 4 chips."""
+    record = _load("farm")
+    serve = {r["config"]: r["samples_per_s"] for r in record["rows"]
+             if r["name"].endswith(".serve")}
+    by_chips = sorted((int(cfg.split(",")[0].split("=")[1]), sps)
+                      for cfg, sps in serve.items())
+    chips = [c for c, _ in by_chips]
+    sps = [s for _, s in by_chips]
+    assert chips == [1, 2, 4], chips
+    assert sps[0] < sps[1] < sps[2], sps
+
+
+def test_farm_bench_energy_is_simulated_joules():
+    record = _load("farm")
+    serve_rows = [r for r in record["rows"] if r["name"].endswith(".serve")]
+    assert serve_rows
+    for r in serve_rows:
+        # simulated chip energy per sample: physical plausibility band
+        assert 1e-12 < r["joules_per_sample"] < 1e-3, r

@@ -22,6 +22,8 @@ from repro.sim import VirtualChip, inject_faults
 from repro.sim.faults import reapply
 from repro.sim.placer import place_network
 
+pytestmark = pytest.mark.sim
+
 
 def _layers(dims, seed=0, spec=PAPER_SPEC):
     key = jax.random.PRNGKey(seed)

@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) for the quantization round-trips and
+the stacked pulse-update invariants (ISSUE 3 satellite).
+
+When hypothesis is not installed these skip gracefully through the stub in
+``conftest.py``; in CI (which installs hypothesis) they run for real.
+Arrays are generated from drawn PRNG seeds rather than drawn element-wise —
+the properties quantify over seeds/shapes, which keeps example generation
+cheap and every failure reproducible from its seed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import quantization as q
+
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+FAST = settings(max_examples=15, deadline=None)
+
+
+def _uniform(seed, shape, lo, hi):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape,
+                              minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# Quantizer round-trips
+# ---------------------------------------------------------------------------
+
+@FAST
+@given(SEEDS, st.integers(min_value=2, max_value=6))
+def test_adc_quantize_round_trip(seed, bits):
+    """ADC output lies on the code grid (idempotent), stays in range, and
+    deviates from a clipped input by at most half a step."""
+    x = _uniform(seed, (37,), -1.0, 1.0)
+    y = q.adc_quantize(x, bits)
+    step = 1.0 / (2 ** bits - 1)
+    assert float(jnp.abs(y).max()) <= 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(q.adc_quantize(y, bits)),
+                               np.asarray(y), atol=1e-6)
+    clipped = jnp.clip(x, -0.5, 0.5)
+    assert float(jnp.abs(y - clipped).max()) <= 0.5 * step + 1e-6
+
+
+@FAST
+@given(SEEDS, st.integers(min_value=3, max_value=8))
+def test_error_quantize_round_trip(seed, bits):
+    """Sign-magnitude error codes: bounded magnitude, sign-consistent
+    dequantization, error at most half the full-scale step."""
+    x = _uniform(seed, (5, 13), -3.0, 3.0)
+    qt = q.error_quantize(x, bits)
+    maxmag = 2 ** (bits - 1) - 1
+    assert int(jnp.abs(qt.codes).max()) <= maxmag
+    deq = qt.dequantize()
+    # sign consistency: a dequantized error never flips direction
+    assert bool(jnp.all((deq == 0) | (jnp.sign(deq) == jnp.sign(x))))
+    assert float(jnp.abs(deq - x).max()) <= 0.5 * float(qt.scale) + 1e-6
+
+
+@FAST
+@given(SEEDS)
+def test_error_quantize_idempotent_on_grid(seed):
+    x = _uniform(seed, (7, 7), -1.0, 1.0)
+    deq = q.error_quantize(x, 8).dequantize()
+    deq2 = q.error_quantize(deq, 8).dequantize()
+    np.testing.assert_allclose(np.asarray(deq2), np.asarray(deq), atol=1e-6)
+
+
+@FAST
+@given(SEEDS, st.integers(min_value=8, max_value=256))
+def test_pulse_discretize_round_trip(seed, levels):
+    """Pulse counts: output is a whole number of unit pulses, bounded by
+    the pulse budget, and re-discretization is the identity."""
+    max_dw = 0.05
+    dw = _uniform(seed, (11, 5), -0.2, 0.2)
+    out = q.pulse_discretize(dw, max_dw, levels, None)
+    unit = max_dw / levels
+    pulses = np.asarray(out) / unit
+    np.testing.assert_allclose(pulses, np.round(pulses), atol=1e-4)
+    assert float(jnp.abs(out).max()) <= max_dw + 1e-6
+    again = q.pulse_discretize(out, max_dw, levels, None)
+    np.testing.assert_allclose(np.asarray(again), np.asarray(out),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pulse_update_stacked invariants
+# ---------------------------------------------------------------------------
+
+def _pulse_args(seed, t=3, m=2, k=17, n=9):
+    key = jax.random.PRNGKey(seed)
+    gp = jax.random.uniform(jax.random.fold_in(key, 0), (t, k, n),
+                            minval=0.0, maxval=1.0)
+    gm = jax.random.uniform(jax.random.fold_in(key, 1), (t, k, n),
+                            minval=0.0, maxval=1.0)
+    xs = jax.random.uniform(jax.random.fold_in(key, 2), (t, m, k),
+                            minval=0.0, maxval=0.5)   # non-negative inputs
+    ds = jax.random.normal(jax.random.fold_in(key, 3), (t, m, n)) * 0.3
+    return gp, gm, xs, ds
+
+
+@FAST
+@given(SEEDS, st.floats(min_value=0.01, max_value=1.0))
+def test_pulse_update_clips_to_physical_range(seed, lr):
+    from repro.kernels import ops as kernel_ops
+    gp, gm, xs, ds = _pulse_args(seed)
+    gp2, gm2 = kernel_ops.pulse_update_stacked(gp, gm, xs, ds, lr=lr,
+                                               w_max=1.0)
+    for g in (gp2, gm2):
+        assert float(g.min()) >= 0.0
+        assert float(g.max()) <= 1.0
+
+
+@FAST
+@given(SEEDS)
+def test_pulse_update_sign_consistent_with_error(seed):
+    """With non-negative inputs, sign(dw) == sign(delta) per neuron: G+
+    must never move against the error direction (and G- never with it) —
+    the hardware's paired-column update discipline."""
+    from repro.kernels import ops as kernel_ops
+    gp, gm, xs, ds = _pulse_args(seed, m=1)
+    gp2, gm2 = kernel_ops.pulse_update_stacked(gp, gm, xs, ds, lr=0.2)
+    s = jnp.sign(ds[:, 0, :])[:, None, :]            # (t, 1, n)
+    assert bool(jnp.all((gp2 - gp) * s >= -1e-6))
+    assert bool(jnp.all((gm2 - gm) * s <= 1e-6))
+
+
+@FAST
+@given(SEEDS)
+def test_pulse_update_deterministic_per_seed(seed):
+    """Same seed -> bitwise-identical updates (the virtual chip's update
+    phase must be reproducible for the lockstep farm contract)."""
+    from repro.kernels import ops as kernel_ops
+    a = kernel_ops.pulse_update_stacked(*_pulse_args(seed), lr=0.1)
+    b = kernel_ops.pulse_update_stacked(*_pulse_args(seed), lr=0.1)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+    c = kernel_ops.pulse_update_stacked(*_pulse_args(seed + 1), lr=0.1)
+    assert not np.array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+@FAST
+@given(SEEDS)
+def test_pulse_update_moves_by_whole_pulses(seed):
+    """Away from the clip boundary, G± moves by whole half-pulses."""
+    from repro.kernels import ops as kernel_ops
+    gp, gm, xs, ds = _pulse_args(seed)
+    gp = 0.3 + 0.4 * gp          # keep well inside [0, 1]
+    gm = 0.3 + 0.4 * gm
+    levels, max_dw = 128, 0.05
+    gp2, _ = kernel_ops.pulse_update_stacked(gp, gm, xs, ds, lr=0.05,
+                                             max_dw=max_dw, levels=levels)
+    half_unit = 0.5 * max_dw / levels
+    steps = np.asarray(gp2 - gp) / half_unit
+    np.testing.assert_allclose(steps, np.round(steps), atol=1e-3)

@@ -1,0 +1,122 @@
+"""Differential sweep: stacked (multicore/farm) kernel entry points vs the
+per-core reference path across randomized shapes, batch sizes, and core
+counts — including ragged shapes whose last cores are padding — asserting
+exact agreement under interpret mode (ISSUE 3 satellite).
+
+"Per-core reference path" means a Python loop of single-core kernel calls
+(`crossbar_fwd` / `crossbar_bwd` / `crossbar_dw`): the stacked entry points
+must be a pure batching transformation, never a numerics change.  An
+einsum oracle guards both paths against a shared bug.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as kernel_ops
+
+pytestmark = pytest.mark.slow
+
+# (T cores, M batch, K fan-in, N fan-out) — mixes tile-aligned and ragged
+# shapes; K=37 / N=11 / M=3 leave the padded tail of the last tile unused,
+# K=512 / N=128 are exact tile multiples, M=129 spills one batch row into
+# a second block.
+SWEEP = [
+    (1, 1, 8, 4),
+    (3, 2, 37, 11),
+    (5, 3, 37, 11),
+    (2, 16, 128, 32),
+    (4, 129, 64, 16),
+    (2, 8, 512, 128),
+    (7, 5, 401, 100),       # paper-geometry core + bias row, ragged tail
+]
+
+
+def _data(t, m, k, n, seed):
+    key = jax.random.PRNGKey(seed)
+    xs = jax.random.normal(jax.random.fold_in(key, 0), (t, m, k))
+    dys = jax.random.normal(jax.random.fold_in(key, 1), (t, m, n))
+    gp = jax.random.uniform(jax.random.fold_in(key, 2), (t, k, n))
+    gm = jax.random.uniform(jax.random.fold_in(key, 3), (t, k, n))
+    return xs, dys, gp, gm
+
+
+@pytest.mark.parametrize("t,m,k,n", SWEEP)
+def test_fwd_stacked_equals_per_core(t, m, k, n):
+    xs, _, gp, gm = _data(t, m, k, n, seed=t * 1000 + m)
+    got = kernel_ops.crossbar_fwd_stacked(xs, gp, gm)
+    ref = jnp.stack([
+        kernel_ops.crossbar_fwd(xs[i], gp[i], gm[i], activation=False)
+        for i in range(t)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    oracle = jnp.einsum("tmk,tkn->tmn", xs, gp - gm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("t,m,k,n", SWEEP)
+def test_bwd_stacked_equals_per_core(t, m, k, n):
+    _, dys, gp, gm = _data(t, m, k, n, seed=t * 2000 + n)
+    got = kernel_ops.crossbar_bwd_stacked(dys, gp, gm)
+    ref = jnp.stack([kernel_ops.crossbar_bwd(dys[i], gp[i], gm[i])
+                     for i in range(t)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    oracle = jnp.einsum("tmn,tkn->tmk", dys, gp - gm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("t,m,k,n", SWEEP[:5])
+def test_dw_stacked_equals_per_core(t, m, k, n):
+    xs, dys, _, _ = _data(t, m, k, n, seed=t * 3000 + k)
+    got = kernel_ops.crossbar_dw_stacked(xs, dys)
+    ref = jnp.stack([kernel_ops.crossbar_dw(xs[i], dys[i])
+                     for i in range(t)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    oracle = jnp.einsum("tmk,tmn->tkn", xs, dys)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("c,t,m,k,n", [(2, 3, 2, 37, 11), (3, 2, 4, 64, 16)])
+def test_chip_axis_equals_per_chip_loop(c, t, m, k, n):
+    """The farm's 4-D chip-axis entry must equal a loop of 3-D stacked
+    calls — chips are a batching axis, not a numerics change."""
+    key = jax.random.PRNGKey(c * 10 + t)
+    xs = jax.random.normal(jax.random.fold_in(key, 0), (c, t, m, k))
+    dys = jax.random.normal(jax.random.fold_in(key, 1), (c, t, m, n))
+    gp = jax.random.uniform(jax.random.fold_in(key, 2), (c, t, k, n))
+    gm = jax.random.uniform(jax.random.fold_in(key, 3), (c, t, k, n))
+    for fn, a, b, extra in [
+        (kernel_ops.crossbar_fwd_stacked, xs, gp, (gm,)),
+        (kernel_ops.crossbar_bwd_stacked, dys, gp, (gm,)),
+        (kernel_ops.crossbar_dw_stacked, xs, dys, ()),
+    ]:
+        got = fn(a, b, *extra)
+        ref = jnp.stack([fn(a[i], b[i], *[e[i] for e in extra])
+                         for i in range(c)])
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_pulse_stacked_chip_axis_equals_per_chip_loop():
+    key = jax.random.PRNGKey(42)
+    c, t, m, k, n = 2, 3, 2, 17, 9
+    gp = jax.random.uniform(jax.random.fold_in(key, 0), (c, t, k, n),
+                            minval=0.2, maxval=0.8)
+    gm = jax.random.uniform(jax.random.fold_in(key, 1), (c, t, k, n),
+                            minval=0.2, maxval=0.8)
+    xs = jax.random.normal(jax.random.fold_in(key, 2), (c, t, m, k))
+    ds = jax.random.normal(jax.random.fold_in(key, 3), (c, t, m, n)) * 0.1
+    gp2, gm2 = kernel_ops.pulse_update_stacked(gp, gm, xs, ds, lr=0.05)
+    for i in range(c):
+        rp, rm = kernel_ops.pulse_update_stacked(gp[i], gm[i], xs[i], ds[i],
+                                                 lr=0.05)
+        np.testing.assert_array_equal(np.asarray(gp2[i]), np.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(gm2[i]), np.asarray(rm))
+
+
+def test_stacked_rejects_mixed_ranks():
+    xs = jnp.zeros((2, 3, 2, 8))
+    gp3 = jnp.zeros((3, 8, 4))
+    with pytest.raises(ValueError):
+        kernel_ops.crossbar_fwd_stacked(xs, gp3, gp3)
