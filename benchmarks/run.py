@@ -17,7 +17,7 @@ import time
 import traceback
 
 # suites whose rows are persisted as BENCH_<key>.json
-JSON_SUITES = ("kernels", "sim", "farm")
+JSON_SUITES = ("kernels", "sim", "farm", "pipeline")
 
 BENCHES = {
     "table2": "benchmarks.bench_core_model",        # Table II
@@ -29,6 +29,7 @@ BENCHES = {
     "kernels": "benchmarks.bench_kernels",          # Pallas kernels
     "sim": "benchmarks.bench_chip_sim",             # virtual chip (repro.sim)
     "farm": "benchmarks.bench_farm",                # chip farm (sim.cluster)
+    "pipeline": "benchmarks.bench_pipeline",        # pipeline fabric (sim.fabric)
     "lm": "benchmarks.bench_lm_step",               # framework LM steps
     "dryrun": "benchmarks.bench_dryrun_table",      # §Roofline cells (cached)
 }

@@ -14,7 +14,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.mapping import NetworkMap, map_autoencoder_pretraining, map_network
+from repro.core.mapping import (NetworkMap, map_autoencoder_pretraining,
+                                map_network, split_network)
 
 # ----- paper constants -----------------------------------------------------
 CROSSBAR_EVAL_NS = 20.0            # "crossbar required 20 ns to be evaluated"
@@ -61,15 +62,30 @@ HOST_LINK_GBPS = 16.0              # effective per-chip host-link bandwidth
 HOST_LINK_PJ_PER_BIT = 5.0         # off-package SerDes energy per bit
 ERR_BITS_LINK = 8                  # reconciliation codes (paper III.F)
 
+# ----- inter-chip pipeline link (NOT in the paper — DESIGN.md §7) ----------
+# The pipeline fabric (repro.sim.fabric) chains chips when a network's core
+# count exceeds one chip's budget.  Chip-boundary traffic obeys the same
+# quantize-at-the-boundary rule as the on-chip NoC: activations cross as
+# 3-bit output-ADC codes forward, errors as 8-bit sign-magnitude codes
+# backward.  The link itself is priced as the same PCIe-class SerDes hop as
+# the farm's host link (assumption, documented because the paper is silent
+# on multi-chip networks).
+INTERCHIP_GBPS = HOST_LINK_GBPS
+INTERCHIP_PJ_PER_BIT = HOST_LINK_PJ_PER_BIT
+
 
 @dataclasses.dataclass(frozen=True)
 class PhaseCost:
+    """Time and core energy of one execution phase (per sample)."""
     time_us: float
     energy_j: float
 
 
 @dataclasses.dataclass(frozen=True)
 class AppCost:
+    """Per-sample analytic cost of one application on one chip: a training
+    iteration (`train`) and a recognition pass (`infer`), core energy and
+    off-chip TSV IO separated (Table III's columns)."""
     name: str
     cores: int
     train: PhaseCost
@@ -79,10 +95,12 @@ class AppCost:
 
     @property
     def train_total_j(self) -> float:
+        """Training energy per sample including off-chip IO."""
         return self.train.energy_j + self.io_energy_train_j
 
     @property
     def infer_total_j(self) -> float:
+        """Recognition energy per sample including off-chip IO."""
         return self.infer.energy_j + self.io_energy_infer_j
 
 
@@ -91,6 +109,8 @@ def _io_energy(bits: float) -> float:
 
 
 def core_step_energy_j(time_us: float, power_mw: float, cores: int) -> float:
+    """Energy of ``cores`` cores running one ``time_us`` step at
+    ``power_mw`` each (Table II row x core count)."""
     return time_us * 1e-6 * power_mw * 1e-3 * cores
 
 
@@ -184,6 +204,8 @@ class FarmCost:
 
     @property
     def serve_w(self) -> float:
+        """Steady-state serving power of the whole farm (J/sample x
+        samples/s)."""
         return self.serve_j_per_sample * self.serve_samples_per_s
 
 
@@ -251,6 +273,190 @@ def farm_cost(name: str, dims: list[int], n_chips: int, *,
         train_step_us=train_step_us, train_j_per_sample=train_j)
 
 
+# ----- pipeline fabric: a network split ACROSS chips (DESIGN.md §7) --------
+
+def schedule_1f1b(fwd_us: list[float], bwd_us: list[float],
+                  link_fwd_us: list[float], link_bwd_us: list[float],
+                  n_micro: int) -> float:
+    """Span (us) of a 1F1B pipeline schedule over K chips.
+
+    ``fwd_us[k]`` / ``bwd_us[k]`` are chip ``k``'s per-microbatch slice
+    times (bwd includes the update phase — the paper's training unit runs
+    bwd and update back to back per layer, Table II); ``link_fwd_us[k]`` /
+    ``link_bwd_us[k]`` the inter-chip transfer time across boundary
+    ``k -> k+1`` (length K-1).  The schedule is the standard one-forward-
+    one-backward discipline: chip ``k`` admits ``min(n_micro, K - k)``
+    warmup forwards, then strictly alternates backward/forward until both
+    streams drain.  Computed by memoized recursion over op finish times
+    (each chip serializes its own ops; cross-chip deps add link time), so
+    the same function prices the analytic model AND the measured-counter
+    schedule — one owner of the recurrence, two inputs to cross-validate.
+
+    With ``n_micro == 1`` the span degenerates to the serialized wave:
+    ``sum(fwd) + sum(bwd) + all link hops``.
+    """
+    K = len(fwd_us)
+    if K == 1:
+        return n_micro * (fwd_us[0] + bwd_us[0])
+    order: list[list[tuple[str, int]]] = []
+    for k in range(K):
+        w = min(n_micro, K - k)
+        ops = [("F", j) for j in range(w)]
+        f, b = w, 0
+        while f < n_micro or b < n_micro:
+            if b < n_micro:
+                ops.append(("B", b))
+                b += 1
+            if f < n_micro:
+                ops.append(("F", f))
+                f += 1
+        order.append(ops)
+    pos = [{op: i for i, op in enumerate(ops)} for ops in order]
+    memo: dict[tuple, float | None] = {}
+
+    def finish(k: int, kind: str, j: int) -> float:
+        key = (k, kind, j)
+        if key in memo:
+            if memo[key] is None:
+                raise RuntimeError("1F1B schedule has a dependency cycle")
+            return memo[key]
+        memo[key] = None
+        i = pos[k][(kind, j)]
+        ready = finish(k, *order[k][i - 1]) if i else 0.0
+        if kind == "F":
+            dep = finish(k - 1, "F", j) + link_fwd_us[k - 1] if k else 0.0
+            dur = fwd_us[k]
+        else:
+            dep = (finish(k + 1, "B", j) + link_bwd_us[k] if k < K - 1
+                   else finish(K - 1, "F", j))
+            dur = bwd_us[k]
+        memo[key] = max(ready, dep) + dur
+        return memo[key]
+
+    return max(finish(k, *order[k][-1]) for k in range(K))
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineCost:
+    """Analytic cost of a K-chip pipeline-parallel fabric.
+
+    The network's pipeline stages are partitioned contiguously over chips
+    (``mapping.split_network``); activations cross each chip boundary as
+    3-bit output-ADC codes, errors come back as 8-bit sign-magnitude codes
+    (the NoC's quantize-at-the-boundary rule, lifted to the inter-chip
+    link).  Serving keeps the Table IV beat — a boundary hop rides inside
+    the routing slot, flagged by ``link_utilization`` when it would not
+    fit; training is priced as the executed full-batch wave
+    (``train_step_us``) plus the 1F1B schedule span (``span_us``) for the
+    requested microbatch count."""
+    name: str
+    n_chips: int
+    stage_groups: tuple[tuple[int, ...], ...]   # layer indices per chip
+    cores_per_chip: tuple[int, ...]
+    chip: AppCost                     # the UNSPLIT serial network's cost
+    beat_us: float
+    boundary_dims: tuple[int, ...]    # activation width at each boundary
+    link_bits_fwd: int                # per sample, all boundaries, 3b codes
+    link_bits_bwd: int                # per sample, all boundaries, 8b codes
+    serve_latency_us: float           # S stage hops at one beat each
+    serve_samples_per_s: float        # one pipeline: 1 sample per beat
+    serve_j_per_sample: float         # chip + TSV + inter-chip link energy
+    link_utilization: float           # busiest boundary: link time / beat
+    train_step_us: float              # executed wave over the global batch
+    train_j_per_sample: float
+    span_us: float                    # 1F1B schedule span for n_micro
+    bubble_fraction: float            # idle fraction of the 1F1B schedule
+    n_micro: int
+    batch: int
+
+
+def _interchip_us(bits: float) -> float:
+    return bits / (INTERCHIP_GBPS * 1e9) * 1e6
+
+
+def _interchip_j(bits: float) -> float:
+    return bits * INTERCHIP_PJ_PER_BIT * 1e-12
+
+
+def pipeline_cost(name: str, dims: list[int], *,
+                  max_cores_per_chip: int | None = None,
+                  n_chips: int | None = None,
+                  batch: int = 1, n_micro: int = 1, input_bits: int = 8,
+                  share_small_layers: bool = False,
+                  rows: int | None = None, cols: int | None = None
+                  ) -> PipelineCost:
+    """Price a pipeline-parallel fabric executing ``dims`` across chips.
+
+    The same quantities are reproduced from *measured* counters by the
+    fabric simulator (``repro.sim.fabric`` / ``sim.report.PipelineReport``);
+    ``tests/test_pipeline_fabric.py`` pins the two to 1% agreement — the
+    §5.3 cross-validation contract extended to the inter-chip link.
+    """
+    from repro.core.mapping import CORE_COLS, CORE_ROWS
+    rows = CORE_ROWS if rows is None else rows
+    cols = CORE_COLS if cols is None else cols
+    chip = network_cost(name, dims, input_bits=input_bits,
+                        share_small_layers=share_small_layers,
+                        rows=rows, cols=cols)
+    nmap = map_network(dims, rows, cols,
+                       share_small_layers=share_small_layers)
+    groups = split_network(nmap, max_cores_per_chip=max_cores_per_chip,
+                           n_chips=n_chips)
+    K = len(groups)
+    beat = pipeline_beat_us(cols)
+
+    # per-chip slice times (per sample): phases + the slice's routing
+    fwd_us, bwd_us = [], []
+    cores_per_chip = []
+    for g in groups:
+        lms = [nmap.layers[i] for i in g]
+        route = sum(lm.routed_outputs for lm in lms) / ROUTING_CLOCK_HZ * 1e6
+        fwd_us.append(len(lms) * FWD_US + route)
+        bwd_us.append(len(lms) * (BWD_US + UPD_US))
+        cores_per_chip.append(sum(lm.placed_cores for lm in lms))
+
+    # chip-boundary traffic: the activation width leaving each group
+    boundary_dims = tuple(dims[g[-1] + 1] for g in groups[:-1])
+    bits_fwd = sum(d * ADC_BITS_OUT for d in boundary_dims)
+    bits_bwd = sum(d * ERR_BITS_LINK for d in boundary_dims)
+
+    # serving: the beat is unchanged (a boundary hop rides inside the
+    # static routing slot); a hop that would NOT fit is flagged by
+    # link_utilization > 1 rather than silently re-priced — the same
+    # idealization discipline as the farm's host link.
+    link_util = max(
+        (_interchip_us(d * ADC_BITS_OUT) / beat for d in boundary_dims),
+        default=0.0)
+    serve_j = chip.infer_total_j + _interchip_j(bits_fwd)
+
+    # training: the executed schedule is a full-batch wave (numerics equal
+    # the serial chip); 1F1B staggering is the *time* model for microbatch
+    # pipelining, priced by the shared schedule recurrence.
+    train_step_us = batch * chip.train.time_us \
+        + _interchip_us(batch * (bits_fwd + bits_bwd))
+    train_j = chip.train_total_j + _interchip_j(bits_fwd + bits_bwd)
+    if batch % n_micro:
+        raise ValueError(f"batch {batch} not divisible by n_micro {n_micro}")
+    u = batch // n_micro
+    link_f = [u * _interchip_us(d * ADC_BITS_OUT) for d in boundary_dims]
+    link_b = [u * _interchip_us(d * ERR_BITS_LINK) for d in boundary_dims]
+    span = schedule_1f1b([u * t for t in fwd_us], [u * t for t in bwd_us],
+                         link_f, link_b, n_micro)
+    busy = sum(batch * (f + b) for f, b in zip(fwd_us, bwd_us))
+    return PipelineCost(
+        name=name, n_chips=K, stage_groups=groups,
+        cores_per_chip=tuple(cores_per_chip), chip=chip, beat_us=beat,
+        boundary_dims=boundary_dims,
+        link_bits_fwd=bits_fwd, link_bits_bwd=bits_bwd,
+        serve_latency_us=len(nmap.layers) * beat,
+        serve_samples_per_s=1e6 / beat,
+        serve_j_per_sample=serve_j,
+        link_utilization=link_util,
+        train_step_us=train_step_us, train_j_per_sample=train_j,
+        span_us=span, bubble_fraction=1.0 - busy / (K * span) if span else 0.0,
+        n_micro=n_micro, batch=batch)
+
+
 def gpu_cost(dims: list[int], *, train: bool) -> PhaseCost:
     """Estimate K20 time/energy for one sample (documented assumptions:
     GPU_UTILIZATION of fp32 peak; training = 3x forward FLOPs; plus a
@@ -266,6 +472,8 @@ def gpu_cost(dims: list[int], *, train: bool) -> PhaseCost:
 
 def speedup_and_efficiency(app: AppCost, dims: list[int]
                            ) -> dict[str, float]:
+    """Chip-vs-K20 speedup and energy-efficiency ratios (the paper's
+    Fig. 22-25 headline comparison) for one priced application."""
     g_train = gpu_cost(dims, train=True)
     g_infer = gpu_cost(dims, train=False)
     return {

@@ -119,6 +119,90 @@ def map_network(dims: list[int], rows: int = CORE_ROWS,
     return NetworkMap(tuple(layer_maps), cores, routed, routing_cycles=routed)
 
 
+def split_network(nmap: NetworkMap, *, max_cores_per_chip: int | None = None,
+                  n_chips: int | None = None) -> tuple[tuple[int, ...], ...]:
+    """Partition a mapped network's layers into contiguous per-chip groups.
+
+    The pipeline-parallel fabric (``repro.sim.fabric``, DESIGN.md §7) uses
+    this when a network's placed core count exceeds one chip's budget: each
+    group becomes one chip's stage slice, and layer boundaries between
+    groups become inter-chip link crossings.  Two modes:
+
+      * ``max_cores_per_chip`` — greedy first-fit: open a new chip whenever
+        the next layer would overflow the budget.  A loopback-shared layer
+        (``LayerMap.shared``) rides in the previous layer's physical core,
+        so it can never open a new chip (its placed-core cost is 0 and the
+        core it shares must be on the same chip);
+      * ``n_chips`` — balanced contiguous partition into exactly
+        ``n_chips`` groups, minimizing the busiest chip's placed cores
+        (linear-partition dynamic program).
+
+    Returns a tuple of per-chip layer-index tuples covering ``nmap.layers``
+    in order.  Raises when a single layer exceeds the budget (a stage
+    cannot be split across chips — the mapper already split it into cores)
+    or when ``n_chips`` exceeds the splittable group count.
+    """
+    if (max_cores_per_chip is None) == (n_chips is None):
+        raise ValueError(
+            "pass exactly one of max_cores_per_chip= or n_chips=")
+    costs = [lm.placed_cores for lm in nmap.layers]
+    n = len(costs)
+    if max_cores_per_chip is not None:
+        budget = max_cores_per_chip
+        too_big = [i for i, c in enumerate(costs) if c > budget]
+        if too_big:
+            raise ValueError(
+                f"layer(s) {too_big} exceed {budget} cores alone; a single "
+                f"stage cannot be pipeline-split across chips")
+        groups: list[list[int]] = [[]]
+        used = 0
+        for i, c in enumerate(costs):
+            # a shared layer (c == 0) always stays with its host core
+            if groups[-1] and c and used + c > budget:
+                groups.append([])
+                used = 0
+            groups[-1].append(i)
+            used += c
+        return tuple(tuple(g) for g in groups)
+    # balanced contiguous K-way partition (classic linear-partition DP on
+    # prefix sums); shared layers glue to the preceding layer first so no
+    # group boundary can separate a loopback-shared layer from its host.
+    blocks: list[list[int]] = []
+    for i, c in enumerate(costs):
+        if blocks and c == 0 and nmap.layers[i].shared:
+            blocks[-1].append(i)
+        else:
+            blocks.append([i])
+    k = n_chips
+    if not 1 <= k <= len(blocks):
+        raise ValueError(f"cannot split {len(blocks)} placeable stage "
+                         f"groups over {k} chips")
+    bcost = [sum(costs[i] for i in b) for b in blocks]
+    nb = len(blocks)
+    prefix = [0]
+    for c in bcost:
+        prefix.append(prefix[-1] + c)
+    INF = float("inf")
+    # best[j][i]: minimal max-group cost splitting the first i blocks into j
+    best = [[INF] * (nb + 1) for _ in range(k + 1)]
+    cut = [[0] * (nb + 1) for _ in range(k + 1)]
+    best[0][0] = 0.0
+    for j in range(1, k + 1):
+        for i in range(j, nb + 1):
+            for s in range(j - 1, i):
+                cand = max(best[j - 1][s], prefix[i] - prefix[s])
+                if cand < best[j][i]:
+                    best[j][i] = cand
+                    cut[j][i] = s
+    bounds = [nb]
+    for j in range(k, 0, -1):
+        bounds.append(cut[j][bounds[-1]])
+    bounds.reverse()
+    return tuple(
+        tuple(i for b in blocks[lo:hi] for i in b)
+        for lo, hi in zip(bounds, bounds[1:]))
+
+
 def map_autoencoder_pretraining(dims: list[int], rows: int = CORE_ROWS,
                                 cols: int = CORE_COLS, *,
                                 share_small_layers: bool = False

@@ -84,7 +84,7 @@ def farm_reduce_sum(contrib: jax.Array, *, axis_name: str | None = None,
     mode "none": exact f32 sum (the default — farm == serial exactly).
     mode "int8": each chip's contribution rides the host link as 8-bit
                  sign-magnitude codes with its OWN full-scale (paper III.F
-                 step 1 per chip) — quarter traffic, error bounded per
+                 step 1 per chip) — quarter payload vs f32, error bounded per
                  chip, so a quiet chip's update survives next to a loud
                  one.  Inside shard_map the scale is per shard, which
                  equals per chip only at one chip per device.

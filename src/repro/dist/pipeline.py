@@ -5,6 +5,14 @@ slices with microbatches streamed through a ``ppermute`` ring: device ``s``
 executes microbatch ``t - s`` at tick ``t``, so the pipe drains in
 ``n_micro + n_stages - 1`` ticks.  ``serial_reference`` is the numerics
 oracle (identical math, no mesh).
+
+This is the *LM-path* (device-mesh) pipeline.  Its chip-level counterpart
+is ``repro.sim.fabric.ChipPipeline`` (DESIGN.md §7), which splits a placed
+crossbar network across simulated chips with the paper's boundary
+quantization and a 1F1B schedule model (`core.hw_model.schedule_1f1b`);
+the two share the stage-group discipline but not code — one pipelines jax
+computations over devices, the other pipelines placed core stacks over
+modeled chips.
 """
 from __future__ import annotations
 

@@ -42,8 +42,11 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--share-small-layers", action="store_true")
     ap.add_argument("--reconcile", default="none", choices=["none", "int8"],
-                    help="host-link update reconciliation: exact f32 sum "
-                         "or 8-bit sign-magnitude codes (4x less traffic)")
+                    help="host-link update reconciliation numerics: exact "
+                         "f32 sum (== serial chip) or 8-bit sign-magnitude "
+                         "codes (matches the metered 8-bit wire format, "
+                         "bounded deviation); accounting meters 8-bit "
+                         "codes either way")
     ap.add_argument("--no-mesh", action="store_true",
                     help="keep the chip axis on one device even when "
                          "multiple JAX devices exist")

@@ -7,10 +7,13 @@ the HLO collective schedule is fixed — the serving-side analogue of the
 paper's static routing.
 
 :class:`RequestQueue` is the shared front-end discipline: a FIFO of
-fixed-shape requests with per-slot refill, used both by the LM
-:class:`BatchedServer` pattern here and by the chip farm's pipelined
-serving loop (``repro.sim.cluster.FarmServer``, DESIGN.md §6), where each
-chip's stage-0 slot refills from the queue every pipeline beat.
+fixed-shape requests with per-slot refill, used by the LM
+:class:`BatchedServer` pattern here, by the chip farm's pipelined serving
+loop (``repro.sim.cluster.FarmServer``, DESIGN.md §6) where each chip's
+stage-0 slot refills from the queue every pipeline beat, and by the
+pipeline fabric's front-end (``repro.sim.fabric.PipelineServer``,
+DESIGN.md §7) where the fabric's single stage-0 slot refills per beat and
+a request walks the chip chain at one beat per stage hop.
 """
 from __future__ import annotations
 

@@ -18,9 +18,15 @@ Modules:
   faults   memristor stuck-on/stuck-off masks + per-core variation injection
   cluster  ChipFarm / FarmServer: N-chip data-parallel farm + serving
            front-end, host-link accounting (DESIGN.md §6)
+  fabric   ChipPipeline / PipelineServer / PipelineFarm: pipeline-parallel
+           fabric for networks larger than one chip, inter-chip link
+           accounting (DESIGN.md §7)
 """
 from repro.sim.chip import VirtualChip  # noqa: F401
 from repro.sim.cluster import ChipFarm, FarmServer, build_farm  # noqa: F401
+from repro.sim.fabric import (ChipPipeline, PipelineFarm,  # noqa: F401
+                              PipelineServer, build_pipeline)
 from repro.sim.faults import inject_faults  # noqa: F401
 from repro.sim.placer import Placement, place_network  # noqa: F401
-from repro.sim.report import FarmReport, SimReport  # noqa: F401
+from repro.sim.report import (FarmReport, PipelineReport,  # noqa: F401
+                              SimReport)

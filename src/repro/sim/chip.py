@@ -118,12 +118,16 @@ class VirtualChip:
         counters.noc.record(st.index, st.lmap.routed_outputs, links,
                             samples)
 
-    def _forward(self, x: jax.Array, counters: PhaseCounters | None
-                 ) -> tuple[list[jax.Array], list[jax.Array]]:
-        """Wave through all stages; returns (per-stage inputs, DPs) with
-        the reference path's transport semantics: the network input is
-        DAC-driven (no ADC), inter-stage activations are 3-bit quantized,
-        the last stage's output leaves raw for the training unit."""
+    def _forward(self, x: jax.Array, counters: PhaseCounters | None, *,
+                 quantize_tail: bool = False
+                 ) -> tuple[list[jax.Array], list[jax.Array], jax.Array]:
+        """Wave through all stages; returns (per-stage inputs, DPs, output
+        activation) with the reference path's transport semantics: the
+        network input is DAC-driven (no ADC), inter-stage activations are
+        3-bit quantized, and the last stage's output leaves raw for the
+        training unit — unless ``quantize_tail`` is set, in which case the
+        tail activation is ADC-quantized too (this chip is a mid-pipeline
+        slice and its output crosses an inter-chip link, DESIGN.md §7)."""
         acts, dps = [], []
         h = x
         last = len(self.placement.stages) - 1
@@ -134,9 +138,28 @@ class VirtualChip:
             if counters is not None:
                 self._count_stage(counters, st, x.shape[0])
             h = hard_sigmoid(dp)
-            if si < last and self.spec.transport_quant:
+            if (si < last or quantize_tail) and self.spec.transport_quant:
                 h = q.adc_quantize_ste(h, self.spec.adc_bits)
-        return acts, dps
+        return acts, dps, h
+
+    def forward_wave(self, x: jax.Array, *, count: bool = True,
+                     train: bool = False, quantize_tail: bool = False
+                     ) -> tuple[list[jax.Array], list[jax.Array], jax.Array]:
+        """Public wave execution over this chip's stage slice.
+
+        Returns ``(acts, dps, out)``: per-stage input activations, per-stage
+        dot products, and the output activation as it leaves the chip —
+        tail-quantized when ``quantize_tail`` (the value that rides the
+        inter-chip link as 3-bit ADC codes).  ``train=True`` bills the
+        training counters instead of the inference counters.  Used by the
+        pipeline fabric (``repro.sim.fabric``) to run one chip's slice of a
+        split network; :meth:`infer` and :meth:`train_step` are this plus
+        the whole-network bookkeeping."""
+        x = jnp.atleast_2d(x)
+        counters = None
+        if count:
+            counters = self.train_counters if train else self.infer_counters
+        return self._forward(x, counters, quantize_tail=quantize_tail)
 
     # ------------------------------------------------------------------
     # Inference
@@ -146,7 +169,7 @@ class VirtualChip:
         """One recognition wave (serialized-latency semantics)."""
         x = jnp.atleast_2d(x)
         counters = self.infer_counters if count else None
-        _, dps = self._forward(x, counters)
+        _, dps, _ = self._forward(x, counters)
         if count:
             M = x.shape[0]
             self.infer_counters.samples += M
@@ -187,21 +210,26 @@ class VirtualChip:
     # Training (the paper's fwd / bwd / update phases, Table II)
     # ------------------------------------------------------------------
 
-    def train_step(self, x: jax.Array, target: jax.Array,
-                   lr: float) -> jax.Array:
-        """One stochastic-BP step executed on the chip, writing the pulse
-        updates into the conductance stacks in place.  Matches
-        `core.crossbar.paper_backprop_step` exactly under equal specs.
-        Returns the output error (target - prediction)."""
-        x = jnp.atleast_2d(x)
-        target = jnp.atleast_2d(target)
-        spec = self.spec
-        M = x.shape[0]
-        c = self.train_counters
+    def backward_update(self, acts: list[jax.Array], dps: list[jax.Array],
+                        delta: jax.Array, lr: float, *,
+                        global_batch: int | None = None,
+                        counters: PhaseCounters | None = None) -> jax.Array:
+        """Run the bwd + update phases over this chip's stage slice.
 
-        acts, dps = self._forward(x, c)
-        out = hard_sigmoid(dps[-1])
-        delta = target - out
+        ``delta`` is the error arriving at the slice's OUTPUT side — the
+        global ``target - out`` for the last chip, or the error handed back
+        over the inter-chip link by the downstream chip (the pipeline
+        fabric's 8-bit sign-magnitude boundary rule holds because the first
+        thing each stage iteration does is the III.F step-1 error
+        quantization, exactly as in the serial loop).  Returns the error to
+        propagate upstream (the value that would cross the link toward the
+        previous chip).  ``global_batch`` is the learning-rate batch
+        normalizer, the FULL step batch when this chip is a pipeline slice
+        (defaults to ``delta``'s batch)."""
+        spec = self.spec
+        M = delta.shape[0]
+        B = M if global_batch is None else global_batch
+        c = counters if counters is not None else self.train_counters
 
         for si in reversed(range(len(self.placement.stages))):
             st = self.placement.stages[si]
@@ -226,11 +254,11 @@ class VirtualChip:
             xs = tile_inputs(acts[si], r, ct, st.rows)
             if spec.update_quant:
                 gp, gm = kernel_ops.pulse_update_stacked(
-                    st.g_plus, st.g_minus, xs, ds, lr=lr / M,
+                    st.g_plus, st.g_minus, xs, ds, lr=lr / B,
                     max_dw=spec.max_update, levels=spec.update_levels,
                     w_max=spec.w_max)
             else:
-                dw = 2.0 * (lr / M) * jnp.einsum("tmk,tmn->tkn", xs, ds)
+                dw = 2.0 * (lr / B) * jnp.einsum("tmk,tmn->tkn", xs, ds)
                 gp = jnp.clip(st.g_plus + 0.5 * dw, 0.0, spec.w_max)
                 gm = jnp.clip(st.g_minus - 0.5 * dw, 0.0, spec.w_max)
             self.placement.set_stage_stacks(si, gp, gm)
@@ -238,15 +266,32 @@ class VirtualChip:
 
             delta = delta_prev
 
-        c.samples += M
-        c.record_io(2 * self.placement.dims[0] * self.input_bits
-                    + self.placement.dims[-1] * hw.ADC_BITS_OUT, M)
         if self.faults is not None:
             # pulse updates cannot move a stuck device: re-assert the
             # masks so training works around, not through, broken cells.
             from repro.sim.faults import reapply
             self.placement = reapply(self.placement, self.faults,
                                      w_max=self.spec.w_max)
+        return delta
+
+    def train_step(self, x: jax.Array, target: jax.Array,
+                   lr: float) -> jax.Array:
+        """One stochastic-BP step executed on the chip, writing the pulse
+        updates into the conductance stacks in place.  Matches
+        `core.crossbar.paper_backprop_step` exactly under equal specs.
+        Returns the output error (target - prediction)."""
+        x = jnp.atleast_2d(x)
+        target = jnp.atleast_2d(target)
+        M = x.shape[0]
+        c = self.train_counters
+
+        acts, dps, _ = self._forward(x, c)
+        out = hard_sigmoid(dps[-1])
+        self.backward_update(acts, dps, target - out, lr, counters=c)
+
+        c.samples += M
+        c.record_io(2 * self.placement.dims[0] * self.input_bits
+                    + self.placement.dims[-1] * hw.ADC_BITS_OUT, M)
         return target - out
 
     # ------------------------------------------------------------------
@@ -258,6 +303,8 @@ class VirtualChip:
         return self.placement.extract_params()
 
     def report(self) -> SimReport:
+        """Measured per-sample costs from this chip's counters (the
+        quantities `hw_model.network_cost` cross-validates, §5.3)."""
         inf, tr = self.infer_counters, self.train_counters
         return SimReport(
             name=self.name,

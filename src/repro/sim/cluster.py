@@ -236,8 +236,10 @@ class ChipFarm:
                    reconcile: str = "none") -> jax.Array:
         """One farm step on the global batch; equals the serial
         `VirtualChip.train_step` on the same data when ``reconcile`` is
-        "none" (mode "int8" trades exactness for 4x less host traffic).
-        Returns the (global) output error."""
+        "none".  Mode "int8" codes each chip's contribution in the 8-bit
+        wire format the link accounting already meters (bounded deviation
+        from the serial chip); mode "none" idealizes an exact f32 sum over
+        that same metered traffic.  Returns the (global) output error."""
         from repro.dist.collectives import farm_reduce_sum
 
         xb = self._split(x, "train")
@@ -304,7 +306,10 @@ class ChipFarm:
         """Host-link bits one chip's update reconciliation moves per step:
         its local dw codes up + the reconciled pulses down, ERR_BITS_LINK
         bits per placed main-grid cell each way (measured from the actual
-        dw stack sizes)."""
+        dw stack sizes).  The wire format is always the paper's 8-bit
+        codes — `hw_model.farm_cost` prices the same constant — so the
+        metered traffic does not depend on the ``reconcile`` mode; "none"
+        is a numerics idealization (exact f32 sum), not a wider link."""
         cells = sum(int(gp[0].size) for gp in self._gp)
         return 2 * cells * hw.ERR_BITS_LINK
 
@@ -333,6 +338,7 @@ class ChipFarm:
 
     @property
     def beat_us(self) -> float:
+        """Steady-state pipeline beat of every chip (Table IV)."""
         return hw.pipeline_beat_us(self.placement.cols)
 
     def layers(self) -> list[dict[str, jax.Array]]:
@@ -383,6 +389,9 @@ class ChipFarm:
         )
 
     def report(self) -> FarmReport:
+        """Aggregate the per-chip counters + host-link tracker into a
+        `FarmReport`, carrying the matching analytic `hw_model.farm_cost`
+        for cross-validation (DESIGN.md §6.4)."""
         per_chip = tuple(self._chip_report(i) for i in range(self.n_chips))
         beat = self.beat_us
         serve_samples = self.serve_link.samples

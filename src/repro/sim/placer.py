@@ -65,15 +65,19 @@ class Stage:
 
     @property
     def row_tiles(self) -> int:
+        """Fan-in tiles (sub-neuron splits, Fig. 14) of this stage."""
         return self.lmap.row_tiles
 
     @property
     def col_tiles(self) -> int:
+        """Fan-out tiles of this stage."""
         return self.lmap.col_tiles
 
 
 @dataclasses.dataclass
 class Placement:
+    """A placed network: the ordered pipeline stages plus the mapping they
+    were materialized from (the sim<->hw_model shared contract)."""
     stages: list[Stage]
     dims: tuple[int, ...]
     rows: int
@@ -89,6 +93,8 @@ class Placement:
 
     def set_stage_stacks(self, index: int, g_plus: jax.Array,
                          g_minus: jax.Array) -> None:
+        """Write updated conductance stacks back into stage ``index`` (the
+        virtual chip's update phase mutates the placement in place)."""
         self.stages[index].g_plus = g_plus
         self.stages[index].g_minus = g_minus
 
@@ -215,8 +221,34 @@ def _agg_pattern(r: int, cols: int, dtype) -> jax.Array:
     return jnp.tile(eye, (r, 1))                        # (r*cols, cols)
 
 
+def sub_placement(pl: Placement, stage_indices: tuple[int, ...]) -> Placement:
+    """A contiguous slice of a placement as its own (sub-)chip placement.
+
+    The pipeline fabric (``repro.sim.fabric``) splits one placed network
+    into per-chip stage groups; each group becomes a `Placement` whose
+    stage list ALIASES the parent's `Stage` objects — a chip slice's pulse
+    updates write into the same stacks the parent placement (and therefore
+    `Placement.extract_params` on the full network) sees.  The sub-map
+    re-derives placed cores / routed outputs for the slice so per-chip
+    accounting stays measured, not copied."""
+    if list(stage_indices) != list(range(stage_indices[0],
+                                         stage_indices[-1] + 1)):
+        raise ValueError(f"stage group {stage_indices} is not contiguous")
+    stages = [pl.stages[i] for i in stage_indices]
+    lms = tuple(pl.nmap.layers[i] for i in stage_indices)
+    routed = sum(lm.routed_outputs for lm in lms)
+    sub_nmap = NetworkMap(layers=lms,
+                          cores=sum(lm.placed_cores for lm in lms),
+                          routed_outputs=routed, routing_cycles=routed)
+    dims = (lms[0].fan_in,) + tuple(lm.fan_out for lm in lms)
+    return Placement(stages=stages, dims=dims, rows=pl.rows, cols=pl.cols,
+                     nmap=sub_nmap)
+
+
 def place_layer(index: int, params: dict[str, jax.Array], lmap: LayerMap,
                 rows: int, cols: int) -> Stage:
+    """Materialize one layer's conductances as a pipeline `Stage` (core
+    stack + Fig.-14 aggregation stack when fan-in is split)."""
     gp, gm = params["g_plus"], params["g_minus"]
     r, c = lmap.row_tiles, lmap.col_tiles
     agg_p = agg_m = None

@@ -23,6 +23,13 @@ PHASE_US = {"fwd": hw.FWD_US, "bwd": hw.BWD_US, "update": hw.UPD_US}
 PHASE_MW = {"fwd": hw.FWD_MW, "bwd": hw.BWD_MW, "update": hw.UPD_MW}
 
 
+def _rel(a: float, b: float) -> float:
+    """Relative error |a-b|/|b| (absolute when the reference is 0) — the
+    single zero-handling convention behind every <=1% cross-validation
+    gate in this module."""
+    return abs(a - b) / abs(b) if b else abs(a)
+
+
 @dataclasses.dataclass
 class PhaseCounters:
     """Execution counters for one mode (inference or training)."""
@@ -43,11 +50,13 @@ class PhaseCounters:
         self.core_steps[phase] += cores * samples
 
     def record_io(self, bits: int, samples: int) -> None:
+        """Off-chip TSV IO: ``bits`` per sample for ``samples`` samples."""
         self.io_bits += bits * samples
 
     # ---- per-sample derived quantities ---------------------------------
 
     def route_us(self) -> float:
+        """Per-sample serialized routing time (hw_model convention)."""
         return self.noc.route_us_per_sample(self.samples)
 
     def time_us(self) -> float:
@@ -58,6 +67,8 @@ class PhaseCounters:
         return t + self.route_us()
 
     def core_energy_j(self, include_ctrl: bool = False) -> float:
+        """Per-sample core energy from the phase counters (Table II rows);
+        ``include_ctrl`` adds the control-logic draw over the whole step."""
         n = max(self.samples, 1)
         e = sum(hw.core_step_energy_j(PHASE_US[p], PHASE_MW[p],
                                       self.core_steps[p] / n)
@@ -71,6 +82,7 @@ class PhaseCounters:
         return e
 
     def io_energy_j(self) -> float:
+        """Per-sample off-chip TSV IO energy."""
         return hw._io_energy(self.io_bits / max(self.samples, 1))
 
 
@@ -91,28 +103,96 @@ class HostLinkTracker:
     steps: int = 0
 
     def record_samples(self, bits_per_sample: int, samples: int) -> None:
+        """Per-sample ingress/egress traffic (inputs in, ADC codes back)."""
         self.sample_bits += bits_per_sample * samples
         self.samples += samples
 
     def record_reconcile(self, bits: int) -> None:
+        """One training step's update-reconciliation traffic (all chips)."""
         self.reconcile_bits += bits
         self.steps += 1
 
     @property
     def total_bits(self) -> int:
+        """All bits the host link carried (samples + reconciliation)."""
         return self.sample_bits + self.reconcile_bits
 
     def time_us(self, bits: float) -> float:
+        """Transfer time of ``bits`` at the link's effective bandwidth."""
         return bits / (self.gbps * 1e9) * 1e6
 
     def energy_j(self, bits: float) -> float:
+        """SerDes energy of moving ``bits`` over the link."""
         return bits * self.pj_per_bit * 1e-12
 
     def sample_bits_per_sample(self) -> float:
+        """Measured per-sample host traffic (bits)."""
         return self.sample_bits / max(self.samples, 1)
 
     def reconcile_bits_per_step(self) -> float:
+        """Measured per-step reconciliation traffic (bits, all chips)."""
         return self.reconcile_bits / max(self.steps, 1)
+
+
+@dataclasses.dataclass
+class InterChipLinkTracker:
+    """Measured chip-boundary traffic of the pipeline fabric (DESIGN.md §7).
+
+    Counts only, like the NoC and host-link trackers — pricing happens at
+    report time with the `hw_model` inter-chip constants.  Forward traffic
+    is activations crossing a chip boundary as 3-bit output-ADC codes;
+    backward traffic is errors returning as 8-bit sign-magnitude codes
+    (the NoC's quantize-at-the-boundary rule lifted to the inter-chip
+    link).  Bits are tracked per boundary so the 1F1B schedule can price
+    each hop separately."""
+    gbps: float = hw.INTERCHIP_GBPS
+    pj_per_bit: float = hw.INTERCHIP_PJ_PER_BIT
+    fwd_bits: dict = dataclasses.field(default_factory=dict)
+    bwd_bits: dict = dataclasses.field(default_factory=dict)
+    fwd_samples: int = 0          # samples that crossed the full boundary set
+    bwd_samples: int = 0
+
+    def record_fwd(self, boundary: int, bits_per_sample: int,
+                   samples: int) -> None:
+        """``samples`` activations crossed ``boundary`` as ADC codes."""
+        self.fwd_bits[boundary] = (self.fwd_bits.get(boundary, 0)
+                                   + bits_per_sample * samples)
+        if boundary == 0:
+            self.fwd_samples += samples
+
+    def record_bwd(self, boundary: int, bits_per_sample: int,
+                   samples: int) -> None:
+        """``samples`` errors crossed ``boundary`` as sign-magnitude codes."""
+        self.bwd_bits[boundary] = (self.bwd_bits.get(boundary, 0)
+                                   + bits_per_sample * samples)
+        if boundary == 0:
+            self.bwd_samples += samples
+
+    @property
+    def fwd_bits_total(self) -> int:
+        """All forward activation bits carried, every boundary."""
+        return sum(self.fwd_bits.values())
+
+    @property
+    def bwd_bits_total(self) -> int:
+        """All backward error bits carried, every boundary."""
+        return sum(self.bwd_bits.values())
+
+    def fwd_bits_per_sample(self) -> float:
+        """Measured per-sample forward boundary traffic (all boundaries)."""
+        return self.fwd_bits_total / max(self.fwd_samples, 1)
+
+    def bwd_bits_per_sample(self) -> float:
+        """Measured per-sample backward boundary traffic (all boundaries)."""
+        return self.bwd_bits_total / max(self.bwd_samples, 1)
+
+    def time_us(self, bits: float) -> float:
+        """Transfer time of ``bits`` over one inter-chip link."""
+        return bits / (self.gbps * 1e9) * 1e6
+
+    def energy_j(self, bits: float) -> float:
+        """SerDes energy of moving ``bits`` across a chip boundary."""
+        return bits * self.pj_per_bit * 1e-12
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,10 +216,12 @@ class SimReport:
 
     @property
     def infer_total_j(self) -> float:
+        """Per-sample recognition energy including off-chip IO."""
         return self.infer_energy_j + self.infer_io_j
 
     @property
     def train_total_j(self) -> float:
+        """Per-sample training energy including off-chip IO."""
         return self.train_energy_j + self.train_io_j
 
     # ---- cross-validation ----------------------------------------------
@@ -155,10 +237,7 @@ class SimReport:
         if cost is None:
             cost = hw.network_cost(self.name, list(self.dims),
                                    pretraining=pretraining)
-
-        def rel(a: float, b: float) -> float:
-            return abs(a - b) / abs(b) if b else abs(a)
-
+        rel = _rel
         out = {
             "infer_time": rel(self.infer_time_us, cost.infer.time_us),
             "infer_energy": rel(self.infer_energy_j, cost.infer.energy_j),
@@ -256,6 +335,7 @@ class FarmReport:
 
     @property
     def cores(self) -> int:
+        """Placed physical cores across the whole farm."""
         return sum(r.cores for r in self.per_chip)
 
     def compare_chip_sum(self) -> dict[str, float]:
@@ -276,9 +356,7 @@ class FarmReport:
           which prices the same quantities from the mapping alone.
         """
         link_j = hw.HOST_LINK_PJ_PER_BIT * 1e-12
-
-        def rel(a, b):
-            return abs(a - b) / abs(b) if b else abs(a)
+        rel = _rel
         out = {}
         ref = self.per_chip[0]
         # per-sample quantities are only defined for chips that ran
@@ -331,9 +409,7 @@ class FarmReport:
                 // self.n_chips, 1)
             cost = hw.farm_cost(self.name, list(self.dims), self.n_chips,
                                 batch_per_chip=per_chip_batch)
-
-        def rel(a, b):
-            return abs(a - b) / abs(b) if b else abs(a)
+        rel = _rel
         out = {"beat": rel(self.beat_us, cost.beat_us)}
         if self.serve_samples:
             if self.serve_samples_per_s > 0:
@@ -365,7 +441,10 @@ class FarmReport:
             rows.append({
                 "name": f"farm.{self.name}.c{self.n_chips}.serve",
                 "config": cfg,
-                "us_per_call": round(1e6 / self.serve_samples_per_s, 4),
+                # samples_per_s is 0 when no beat ever filled every chip
+                # slot (fewer requests than chips): no capacity measured
+                "us_per_call": (round(1e6 / self.serve_samples_per_s, 4)
+                                if self.serve_samples_per_s else 0.0),
                 "samples_per_s": round(self.serve_samples_per_s, 2),
                 "joules_per_sample": self.serve_j_per_sample,
                 "derived": (f"beats={self.serve_beats} "
@@ -382,5 +461,124 @@ class FarmReport:
                 "joules_per_sample": self.train_j_per_sample,
                 "derived": (f"steps={self.train_steps} "
                             f"reconcile_bits={self.host_reconcile_bits:.0f}"),
+            })
+        return rows
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """Aggregate measured costs of a K-chip pipeline fabric
+    (``repro.sim.fabric``, DESIGN.md §7).
+
+    Built from the per-chip-slice counters (each slice's `SimReport`) plus
+    the inter-chip link tracker; cross-validated against
+    ``hw_model.pipeline_cost`` (the §5.3 contract extended to the
+    inter-chip link) by :meth:`compare_hw`, asserted in
+    ``tests/test_pipeline_fabric.py`` and enforced by
+    ``python -m repro.launch.pipeline``."""
+    name: str
+    n_chips: int
+    dims: tuple[int, ...]
+    stage_groups: tuple[tuple[int, ...], ...]
+    cores_per_chip: tuple[int, ...]
+    per_chip: tuple[SimReport, ...]
+    beat_us: float
+    serve_samples: int                # retired by the serving front-end
+    serve_beats: int
+    serve_samples_per_s: float        # steady-state (one sample per beat)
+    serve_j_per_sample: float         # core + TSV + inter-chip link
+    serve_latency_us: float           # S stage hops at one beat each
+    link_utilization: float           # busiest boundary: link time / beat
+    train_samples: int
+    train_steps: int
+    train_step_us: float              # executed wave, measured
+    train_j_per_sample: float
+    link_bits_fwd: float              # per sample, all boundaries
+    link_bits_bwd: float
+    link_bits_total: int              # raw tracker total, both directions
+    span_us: float                    # 1F1B schedule span (measured slices)
+    bubble_fraction: float
+    n_micro: int = 1
+    batch_per_step: int = 1
+    serve_slot_m: float = 1.0         # samples per serving slot (request
+                                      # microbatch, measured)
+    analytic: "object | None" = None  # pipeline_cost with matching settings
+
+    @property
+    def cores(self) -> int:
+        """Placed physical cores across the whole pipeline."""
+        return sum(self.cores_per_chip)
+
+    def compare_hw(self, cost: "object | None" = None) -> dict[str, float]:
+        """Relative error vs the analytic ``hw_model.pipeline_cost``
+        (<= 1%).  With no explicit ``cost`` the report's own ``analytic``
+        cost is used — built by ``ChipPipeline.report()`` with the
+        fabric's actual split / batch / microbatch settings."""
+        if cost is None:
+            cost = self.analytic
+        if cost is None:
+            cost = hw.pipeline_cost(
+                self.name, list(self.dims), n_chips=self.n_chips,
+                batch=self.batch_per_step, n_micro=self.n_micro)
+        rel = _rel
+        out = {"beat": rel(self.beat_us, cost.beat_us)}
+        if self.serve_samples:
+            out.update({
+                "serve_energy": rel(self.serve_j_per_sample,
+                                    cost.serve_j_per_sample),
+                "serve_latency": rel(self.serve_latency_us,
+                                     cost.serve_latency_us),
+                # the analytic side prices one request slot per beat; a
+                # measured microbatch scales it (same rule as the farm)
+                "serve_throughput": rel(
+                    self.serve_samples_per_s,
+                    cost.serve_samples_per_s * self.serve_slot_m),
+                "serve_link_bits": rel(self.link_bits_fwd,
+                                       cost.link_bits_fwd),
+            })
+        if self.train_steps:
+            out.update({
+                "train_step_time": rel(self.train_step_us,
+                                       cost.train_step_us),
+                "train_energy": rel(self.train_j_per_sample,
+                                    cost.train_j_per_sample),
+                "train_link_bits_fwd": rel(self.link_bits_fwd,
+                                           cost.link_bits_fwd),
+                "train_link_bits_bwd": rel(self.link_bits_bwd,
+                                           cost.link_bits_bwd),
+                "span": rel(self.span_us, cost.span_us),
+            })
+        return out
+
+    def rows(self) -> list[dict]:
+        """BENCH_pipeline.json rows (shared bench schema)."""
+        cfg = (f"chips={self.n_chips},dims={'x'.join(map(str, self.dims))},"
+               f"cores={'+'.join(map(str, self.cores_per_chip))}")
+        rows = []
+        if self.serve_samples:
+            rows.append({
+                "name": f"pipeline.{self.name}.k{self.n_chips}.serve",
+                "config": cfg,
+                "us_per_call": (round(1e6 / self.serve_samples_per_s, 4)
+                                if self.serve_samples_per_s else 0.0),
+                "samples_per_s": round(self.serve_samples_per_s, 2),
+                "joules_per_sample": self.serve_j_per_sample,
+                "derived": (f"beats={self.serve_beats} "
+                            f"latency_us={self.serve_latency_us:.2f} "
+                            f"link_util={self.link_utilization:.3f}"),
+            })
+        if self.train_steps:
+            rows.append({
+                "name": f"pipeline.{self.name}.k{self.n_chips}.train",
+                "config": cfg,
+                "us_per_call": round(self.train_step_us, 4),
+                "samples_per_s": round(
+                    1e6 * self.train_samples
+                    / max(self.train_step_us * self.train_steps, 1e-12), 2),
+                "joules_per_sample": self.train_j_per_sample,
+                "derived": (f"steps={self.train_steps} "
+                            f"span_us={self.span_us:.2f} "
+                            f"bubble={self.bubble_fraction:.3f} "
+                            f"n_micro={self.n_micro}"),
             })
         return rows

@@ -1,6 +1,7 @@
 """Bench artifact schema: BENCH_kernels.json / BENCH_sim.json /
-BENCH_farm.json must share the machine-readable row keys so the perf
-trajectory stays comparable across PRs (ISSUE 3 satellite).  CI runs this
+BENCH_farm.json / BENCH_pipeline.json must share the machine-readable row
+keys so the perf trajectory stays comparable across PRs (ISSUE 3
+satellite, extended to the pipeline fabric by ISSUE 4).  CI runs this
 after the bench suites; locally it validates the committed artifacts.
 """
 import json
@@ -11,7 +12,7 @@ import pytest
 from benchmarks.common import REQUIRED_ROW_KEYS
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-SUITES = ("kernels", "sim", "farm")
+SUITES = ("kernels", "sim", "farm", "pipeline")
 
 
 def _load(suite):
@@ -55,6 +56,26 @@ def test_farm_bench_scales_monotonically():
     sps = [s for _, s in by_chips]
     assert chips == [1, 2, 4], chips
     assert sps[0] < sps[1] < sps[2], sps
+
+
+def test_pipeline_bench_beat_survives_the_split():
+    """The ISSUE 4 scaling claim, asserted on the artifact itself: the
+    serving beat — and therefore steady-state samples/s — is identical at
+    every pipeline split, and the 1F1B span shrinks with microbatches."""
+    record = _load("pipeline")
+    serve = [r["samples_per_s"] for r in record["rows"]
+             if r["name"].endswith(".serve")]
+    assert len(serve) >= 2
+    assert all(abs(s - serve[0]) / serve[0] < 0.01 for s in serve), serve
+    spans = {}
+    for r in record["rows"]:
+        m = r["name"].rsplit(".span.m", 1)
+        if len(m) == 2:
+            spans.setdefault(m[0], []).append((int(m[1]), r["us_per_call"]))
+    assert spans
+    for name, seq in spans.items():
+        seq = [us for _, us in sorted(seq)]
+        assert all(b <= a + 1e-9 for a, b in zip(seq, seq[1:])), (name, seq)
 
 
 def test_farm_bench_energy_is_simulated_joules():

@@ -1,0 +1,380 @@
+"""Pipeline fabric (repro.sim.fabric): a network split across chips trains
+bitwise-equal to the serial `VirtualChip`, serves through the beat-level
+front-end, and its measured inter-chip counters cross-validate against
+`hw_model.pipeline_cost` to <= 1% (ISSUE 4 acceptance criteria).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_apps import PAPER_SPEC
+from repro.core import crossbar as xb, hw_model as hw
+from repro.core.mapping import map_network, split_network
+from repro.runtime.serve_loop import RequestQueue
+from repro.sim import ChipPipeline, PipelineFarm, VirtualChip
+from repro.sim.fabric import PipelineServer, build_pipeline
+
+pytestmark = pytest.mark.sim
+
+
+def _layers(dims, seed=0, spec=PAPER_SPEC):
+    key = jax.random.PRNGKey(seed)
+    return [xb.init_conductances(jax.random.fold_in(key, i), f, o, spec)
+            for i, (f, o) in enumerate(zip(dims, dims[1:]))]
+
+
+def _x(dims, n=4, seed=9):
+    return jax.random.uniform(jax.random.PRNGKey(seed), (n, dims[0]),
+                              minval=-0.5, maxval=0.5)
+
+
+# ---------------------------------------------------------------------------
+# Stage splitting (core/mapping.split_network)
+# ---------------------------------------------------------------------------
+
+def test_split_by_budget_is_greedy_and_contiguous():
+    nmap = map_network(hw.PAPER_NETWORKS["isolet_class"])
+    groups = split_network(nmap, max_cores_per_chip=100)
+    assert [list(g) for g in groups] == [[0], [1, 2, 3, 4]]
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(len(nmap.layers)))
+    for g in groups:
+        assert sum(nmap.layers[i].placed_cores for i in g) <= 100
+
+
+def test_split_balanced_minimizes_busiest_chip():
+    nmap = map_network(hw.PAPER_NETWORKS["isolet_class"])  # [60,70,20,9,1]
+    g2 = split_network(nmap, n_chips=2)
+    assert [list(g) for g in g2] == [[0], [1, 2, 3, 4]]    # max 100 < 130
+    g3 = split_network(nmap, n_chips=3)
+    assert [list(g) for g in g3] == [[0], [1], [2, 3, 4]]
+
+
+def test_split_keeps_loopback_shared_layers_with_their_host():
+    nmap = map_network([41, 15, 41], share_small_layers=True)
+    assert nmap.layers[1].shared
+    groups = split_network(nmap, max_cores_per_chip=1)
+    assert [list(g) for g in groups] == [[0, 1]]
+    groups = split_network(nmap, n_chips=1)
+    assert [list(g) for g in groups] == [[0, 1]]
+
+
+def test_split_rejects_oversized_stage_and_bad_args():
+    nmap = map_network(hw.PAPER_NETWORKS["isolet_class"])
+    with pytest.raises(ValueError, match="cannot be pipeline-split"):
+        split_network(nmap, max_cores_per_chip=10)
+    with pytest.raises(ValueError, match="exactly one"):
+        split_network(nmap)
+    with pytest.raises(ValueError, match="exactly one"):
+        split_network(nmap, max_cores_per_chip=100, n_chips=2)
+    with pytest.raises(ValueError, match="cannot split"):
+        split_network(nmap, n_chips=6)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise equivalence with the serial chip (the headline criterion)
+# ---------------------------------------------------------------------------
+
+def test_single_chip_degenerate_split_is_bitwise_serial():
+    """Under the default 144-core budget a small network stays on one
+    chip, and the fabric IS the serial chip — bitwise, zero link bits."""
+    dims = [41, 15, 41]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    assert pipe.n_chips == 1 and pipe.boundary_dims == ()
+    x = _x(dims)
+    assert float(jnp.abs(pipe.infer(x) - chip.infer(x)).max()) == 0.0
+    ef = pipe.train_step(x, x, lr=0.2)
+    ec = chip.train_step(x, x, lr=0.2)
+    assert float(jnp.abs(ef - ec).max()) == 0.0
+    for a, b in zip(pipe.layers(), chip.layers()):
+        for k in ("g_plus", "g_minus"):
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+    assert pipe.link.fwd_bits_total == pipe.link.bwd_bits_total == 0
+
+
+@pytest.mark.parametrize("split_kw", [dict(n_chips=2),
+                                      dict(max_cores_per_chip=9)])
+def test_pipeline_train_is_bitwise_serial(split_kw):
+    """A network split over >= 2 chips (mnist_class: 13 cores, both split
+    modes) trains bitwise-equal to the serial unsplit reference — the
+    chip boundary applies exactly the quantizations the serial chip
+    already applies between stages."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, **split_kw)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    assert pipe.n_chips >= 2
+    x = _x(dims, n=4)
+    tgt = jax.random.uniform(jax.random.PRNGKey(4), (4, dims[-1]),
+                             minval=-0.5, maxval=0.5)
+    ef = pipe.train_step(x, tgt, lr=0.1)
+    ec = chip.train_step(x, tgt, lr=0.1)
+    np.testing.assert_array_equal(np.asarray(ef), np.asarray(ec))
+    for a, b in zip(pipe.layers(), chip.layers()):
+        for k in ("g_plus", "g_minus"):
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+
+def test_ragged_stage_split_multi_step_stays_locked():
+    """An uneven 3-way split (1/1/2 stages on mnist) stays bitwise locked
+    to the serial chip over multiple steps, microbatched or not."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims, seed=5)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, n_chips=3)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    assert sorted(len(g) for g in pipe.groups) != \
+        [len(pipe.groups[0])] * pipe.n_chips        # genuinely ragged
+    for step in range(2):
+        x = _x(dims, n=4, seed=20 + step)
+        ef = pipe.train_step(x, x[:, :dims[-1]], lr=0.2,
+                             n_micro=2 if step else 1)
+        ec = chip.train_step(x, x[:, :dims[-1]], lr=0.2)
+        np.testing.assert_array_equal(np.asarray(ef), np.asarray(ec))
+    for a, b in zip(pipe.layers(), chip.layers()):
+        np.testing.assert_array_equal(np.asarray(a["g_plus"]),
+                                      np.asarray(b["g_plus"]))
+
+
+def test_pipeline_infer_matches_serial_chip():
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, n_chips=2)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    x = _x(dims, n=3)
+    np.testing.assert_array_equal(np.asarray(pipe.infer(x)),
+                                  np.asarray(chip.infer(x)))
+
+
+@pytest.mark.slow
+def test_network_exceeding_paper_chip_budget_runs_across_two_chips():
+    """The ISSUE 4 acceptance criterion verbatim: isolet_class places 160
+    cores — more than the paper's 144-core chip — so it cannot run on one
+    chip; under the default budget it splits across 2 chips, trains
+    bitwise-equal to the serial reference, and serves."""
+    dims = hw.PAPER_NETWORKS["isolet_class"]
+    nmap = map_network(dims)
+    assert nmap.cores > hw.SYSTEM_CORES
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC,
+                        name="isolet_class")
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    assert pipe.n_chips >= 2
+    assert all(c.placement.n_cores <= hw.SYSTEM_CORES for c in pipe.chips)
+    x = _x(dims, n=2)
+    tgt = jax.random.uniform(jax.random.PRNGKey(4), (2, dims[-1]),
+                             minval=-0.5, maxval=0.5)
+    ef = pipe.train_step(x, tgt, lr=0.1)
+    ec = chip.train_step(x, tgt, lr=0.1)
+    np.testing.assert_array_equal(np.asarray(ef), np.asarray(ec))
+    out, stats = pipe.serve(x)
+    ref = xb.mlp_forward(pipe.layers(), x, PAPER_SPEC)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    errs = pipe.report().compare_hw()
+    assert all(v <= 0.01 for v in errs.values()), errs
+
+
+# ---------------------------------------------------------------------------
+# Serving front-end
+# ---------------------------------------------------------------------------
+
+def test_served_outputs_equal_mlp_forward_and_preserve_order():
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, n_chips=2)
+    x = _x(dims, n=5)
+    out, stats = pipe.serve(x)
+    ref = xb.mlp_forward(layers, x, PAPER_SPEC)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+    S = len(dims) - 1
+    assert stats["beats"] == S - 1 + 5          # one beat per stage hop
+    assert stats["beat_us"] == pytest.approx(0.77)
+    assert stats["latency_us"] == pytest.approx(S * 0.77)
+
+
+def test_pipeline_server_rejects_stale_conductance_snapshot():
+    dims = [41, 15, 41]
+    pipe = ChipPipeline(_layers(dims), PAPER_SPEC, n_chips=2)
+    server = PipelineServer(pipe)
+    x = _x(dims, n=2)
+    pipe.train_step(x, x, lr=0.1)
+    with pytest.raises(RuntimeError, match="fresh server"):
+        server.run(RequestQueue(list(x)))
+    out, _ = pipe.serve(x)          # a fresh server sees the new weights
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(xb.mlp_forward(pipe.layers(), x, PAPER_SPEC)),
+        atol=1e-5)
+
+
+def test_pipeline_server_rejects_ragged_request_batches():
+    pipe = ChipPipeline(_layers([41, 15, 41]), PAPER_SPEC, n_chips=2)
+    server = PipelineServer(pipe)
+    queue = RequestQueue()
+    queue.submit(jnp.zeros((1, 41)))
+    queue.submit(jnp.zeros((3, 41)))
+    with pytest.raises(ValueError, match="microbatch"):
+        server.run(queue)
+
+
+def test_pipeline_serve_empty_queue():
+    pipe = ChipPipeline(_layers([41, 15, 41]), PAPER_SPEC, n_chips=2)
+    out, stats = pipe.serve(jnp.zeros((0, 41)))
+    assert out.shape == (0, 41) and stats["retired"] == 0
+
+
+def test_pipeline_serve_uniform_microbatches():
+    dims = [41, 15, 41]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, n_chips=2)
+    server = PipelineServer(pipe)
+    reqs = [_x(dims, n=3, seed=s) for s in (1, 2, 3)]
+    queue = RequestQueue(reqs)
+    stats = server.run(queue)
+    assert stats["retired"] == 9
+    for got, x in zip(queue.results(), reqs):
+        np.testing.assert_allclose(
+            np.asarray(got),
+            np.asarray(xb.mlp_forward(layers, x, PAPER_SPEC)), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Accounting: measured counters vs hw_model.pipeline_cost
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims,name,kw", [
+    (hw.PAPER_NETWORKS["mnist_class"], "mnist_class", dict(n_chips=2)),
+    (hw.PAPER_NETWORKS["mnist_class"], "mnist_class",
+     dict(max_cores_per_chip=9)),
+])
+def test_pipeline_cross_validation_within_1pct(dims, name, kw):
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, name=name,
+                        **kw)
+    x = _x(dims, n=4, seed=1)
+    pipe.serve(x)
+    tgt = jax.random.uniform(jax.random.PRNGKey(5), (4, dims[-1]),
+                             minval=-0.5, maxval=0.5)
+    pipe.train_step(x, tgt, lr=0.1, n_micro=2)
+    rep = pipe.report()
+    errs = rep.compare_hw()
+    assert {"beat", "serve_energy", "serve_latency", "serve_throughput",
+            "serve_link_bits", "train_step_time", "train_energy",
+            "train_link_bits_fwd", "train_link_bits_bwd",
+            "span"} <= set(errs)
+    for k, v in errs.items():
+        assert v <= 0.01, (name, k, v)
+
+
+def test_boundary_link_bits_follow_the_noc_quantization_rule():
+    """Forward crossings are 3-bit ADC codes, backward crossings 8-bit
+    sign-magnitude codes, per boundary activation line — measured."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    pipe = ChipPipeline(_layers(dims), PAPER_SPEC, n_chips=2)
+    x = _x(dims, n=4)
+    pipe.train_step(x, x[:, :dims[-1]], lr=0.1)
+    b = sum(pipe.boundary_dims)
+    assert pipe.link.fwd_bits_per_sample() == b * hw.ADC_BITS_OUT
+    assert pipe.link.bwd_bits_per_sample() == b * hw.ERR_BITS_LINK
+    rep = pipe.report()
+    assert rep.link_bits_fwd == rep.analytic.link_bits_fwd
+    assert rep.link_bits_bwd == rep.analytic.link_bits_bwd
+
+
+def test_per_chip_counters_partition_the_serial_chip():
+    """The slice counters are a partition: summed per-sample train time
+    across slices equals the serial chip's measured train time."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims)
+    pipe = ChipPipeline([dict(p) for p in layers], PAPER_SPEC, n_chips=2)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    x = _x(dims, n=2)
+    pipe.train_step(x, x[:, :dims[-1]], lr=0.1)
+    chip.train_step(x, x[:, :dims[-1]], lr=0.1)
+    split_sum = sum(c.train_counters.time_us() for c in pipe.chips)
+    assert split_sum == pytest.approx(chip.train_counters.time_us())
+
+
+# ---------------------------------------------------------------------------
+# 1F1B schedule model
+# ---------------------------------------------------------------------------
+
+def test_schedule_1f1b_wave_degenerates_to_serial_sum():
+    span = hw.schedule_1f1b([1.0, 2.0], [3.0, 1.5], [0.5], [0.25], 1)
+    assert span == pytest.approx(1 + 2 + 3 + 1.5 + 0.5 + 0.25)
+
+
+def test_schedule_1f1b_span_shrinks_with_microbatches():
+    """For a fixed batch, more microbatches shrink the span toward the
+    busiest chip's serialized work — never below it, never above the
+    wave."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    spans = [hw.pipeline_cost("mnist_class", list(dims), n_chips=2,
+                              batch=8, n_micro=m).span_us
+             for m in (1, 2, 4, 8)]
+    assert all(b <= a + 1e-9 for a, b in zip(spans, spans[1:])), spans
+    wave = hw.pipeline_cost("mnist_class", list(dims), n_chips=2,
+                            batch=8, n_micro=1)
+    assert spans[0] == pytest.approx(wave.train_step_us)
+    assert 0.0 <= wave.bubble_fraction < 1.0
+
+
+def test_schedule_1f1b_rejects_indivisible_microbatches():
+    with pytest.raises(ValueError, match="not divisible"):
+        hw.pipeline_cost("mnist_class",
+                         list(hw.PAPER_NETWORKS["mnist_class"]),
+                         n_chips=2, batch=4, n_micro=3)
+    pipe = ChipPipeline(_layers([41, 15, 41]), PAPER_SPEC, n_chips=2)
+    with pytest.raises(ValueError, match="not divisible"):
+        pipe.train_step(_x([41, 15, 41], n=4), _x([41, 15, 41], n=4),
+                        lr=0.1, n_micro=3)
+
+
+# ---------------------------------------------------------------------------
+# Pipeline x farm composition (farm of pipelines)
+# ---------------------------------------------------------------------------
+
+def test_pipeline_farm_composition_lockstep():
+    """N pipeline replicas trained data-parallel stay bitwise in lockstep
+    AND equal the serial chip — both scaling axes compose without
+    touching the numerics."""
+    dims = hw.PAPER_NETWORKS["mnist_class"]
+    layers = _layers(dims)
+    pf = PipelineFarm([dict(p) for p in layers], PAPER_SPEC,
+                      n_pipelines=2, n_chips=2)
+    chip = VirtualChip([dict(p) for p in layers], PAPER_SPEC)
+    assert pf.total_chips == 4
+    x = _x(dims, n=4)
+    tgt = jax.random.uniform(jax.random.PRNGKey(4), (4, dims[-1]),
+                             minval=-0.5, maxval=0.5)
+    ef = pf.train_step(x, tgt, lr=0.1)
+    ec = chip.train_step(x, tgt, lr=0.1)
+    np.testing.assert_allclose(np.asarray(ef), np.asarray(ec), atol=1e-6)
+    assert pf.replicas_in_sync()
+    for a, b in zip(pf.layers(), chip.layers()):
+        for k in ("g_plus", "g_minus"):
+            np.testing.assert_allclose(np.asarray(a[k]), np.asarray(b[k]),
+                                       atol=1e-6)
+    out, _ = pf.serve(x)
+    ref = xb.mlp_forward(pf.layers(), x, PAPER_SPEC)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+    # pipeline-axis link metering matches the analytic boundary bits
+    frep, plink = pf.report()
+    pc = hw.pipeline_cost("mnist_class", list(dims), n_chips=2, batch=4)
+    assert plink["link_bits_fwd"] == pc.link_bits_fwd
+    assert plink["link_bits_bwd"] == pc.link_bits_bwd
+    # and the DP axis still meets the farm contract
+    errs = {**frep.compare_chip_sum(), **frep.compare_hw()}
+    assert all(v <= 0.01 for v in errs.values()), errs
+
+
+def test_build_pipeline_helper():
+    pipe = build_pipeline("mnist_class", n_chips=2, seed=1)
+    assert pipe.n_chips == 2
+    x = _x(hw.PAPER_NETWORKS["mnist_class"], n=2)
+    out = pipe.infer(x)
+    assert out.shape == (2, 10)

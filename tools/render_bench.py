@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Render the README's benchmark-results section from BENCH_*.json.
+
+The bench artifacts share one machine-readable row schema
+(``benchmarks/common.REQUIRED_ROW_KEYS``, validated by
+``tests/test_bench_schema.py``); this tool turns the headline rows into
+the markdown table embedded in README.md, so the published numbers are
+*generated from* the artifacts rather than hand-typed:
+
+  PYTHONPATH=src python -m benchmarks.run kernels sim farm pipeline
+  python tools/render_bench.py        # paste output into README.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUITES = ("sim", "farm", "pipeline")
+# headline rows only: simulated serving/training claims, not host timings
+KEEP = (".serve", ".train", ".stream", ".infer")
+
+
+def fmt_sps(v: float) -> str:
+    """Human samples/s."""
+    return f"{v:,.0f}" if v else "—"
+
+
+def fmt_j(v: float) -> str:
+    """Joules per sample as pJ/nJ/µJ."""
+    if not v:
+        return "—"
+    for unit, scale in (("pJ", 1e12), ("nJ", 1e9), ("µJ", 1e6)):
+        if v * scale < 1e3:
+            return f"{v * scale:.2f} {unit}"
+    return f"{v:.2e} J"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--suites", nargs="*", default=list(SUITES))
+    args = ap.parse_args(argv)
+
+    print("| benchmark row | config | samples/s | energy/sample | notes |")
+    print("|---|---|---|---|---|")
+    for suite in args.suites:
+        path = os.path.join(REPO, f"BENCH_{suite}.json")
+        if not os.path.exists(path):
+            print(f"| *{suite}: BENCH_{suite}.json not generated* | | | | |")
+            continue
+        with open(path) as f:
+            record = json.load(f)
+        for row in record["rows"]:
+            if not row["name"].endswith(KEEP):
+                continue
+            print(f"| `{row['name']}` | `{row['config']}` "
+                  f"| {fmt_sps(row['samples_per_s'])} "
+                  f"| {fmt_j(row['joules_per_sample'])} "
+                  f"| {row.get('derived', '')} |")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

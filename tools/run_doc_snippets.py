@@ -1,0 +1,89 @@
+#!/usr/bin/env python
+"""Execute the documentation's quickstart snippets (ISSUE 4 satellite).
+
+Extracts every fenced ```bash block from the given markdown files (default:
+README.md and docs/ARCHITECTURE.md) and runs it with ``bash -e`` from the
+repo root, ``PYTHONPATH=src`` preset — so a quickstart that drifts from the
+actual CLIs fails CI instead of rotting.  A block can opt out by being
+preceded (within two lines) by an HTML comment ``<!-- doc-snippet: skip -->``
+(for illustrative fragments that are not runnable commands).
+
+  python tools/run_doc_snippets.py                 # run everything
+  python tools/run_doc_snippets.py --list          # show what would run
+  python tools/run_doc_snippets.py docs/ARCHITECTURE.md
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_DOCS = ["README.md", "docs/ARCHITECTURE.md"]
+SKIP_MARK = "<!-- doc-snippet: skip -->"
+
+
+def extract_blocks(path: str) -> list[tuple[int, str, bool]]:
+    """(start line, script, skipped) for each fenced bash block."""
+    with open(os.path.join(REPO, path)) as f:
+        lines = f.read().splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        if re.match(r"^```(bash|sh)\s*$", lines[i]):
+            start = i + 1
+            body = []
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            ctx = lines[max(0, start - 4):start - 1]
+            skipped = any(SKIP_MARK in line for line in ctx)
+            blocks.append((start, "\n".join(body), skipped))
+        i += 1
+    return blocks
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("docs", nargs="*", default=DEFAULT_DOCS)
+    ap.add_argument("--list", action="store_true",
+                    help="print the runnable blocks without executing")
+    args = ap.parse_args(argv)
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+
+    n_run = n_fail = 0
+    for doc in args.docs:
+        blocks = extract_blocks(doc)
+        if not blocks:
+            print(f"!! {doc}: no bash blocks found")
+            n_fail += 1
+            continue
+        for start, script, skipped in blocks:
+            tag = f"{doc}:{start}"
+            if skipped:
+                print(f"-- skip {tag}")
+                continue
+            if args.list:
+                print(f"-- would run {tag}:")
+                print("\n".join(f"     {l}" for l in script.splitlines()))
+                continue
+            print(f"== run {tag}", flush=True)
+            p = subprocess.run(["bash", "-e", "-c", script], cwd=REPO,
+                               env=env)
+            n_run += 1
+            if p.returncode != 0:
+                print(f"!! FAILED {tag} (rc={p.returncode})")
+                n_fail += 1
+    if not args.list:
+        print(f"# {n_run} snippet(s) run, {n_fail} failure(s)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
