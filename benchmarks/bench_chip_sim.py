@@ -35,23 +35,34 @@ def main() -> None:
                                (STREAM_SAMPLES, dims[0]),
                                minval=-0.5, maxval=0.5)
         tgt = jax.random.uniform(jax.random.PRNGKey(2),
-                                 (1, dims[-1]), minval=-0.5, maxval=0.5)
+                                 (STREAM_SAMPLES, dims[-1]),
+                                 minval=-0.5, maxval=0.5)
 
         wall = common.time_call(
             lambda: chip.infer(x, count=False), iters=5, warmup=1)
-        common.row(f"sim.{app}.wall", wall / STREAM_SAMPLES,
+        infer_wall = wall / STREAM_SAMPLES
+        common.row(f"sim.{app}.wall", infer_wall,
                    f"host us/sample, {chip.placement.n_cores} cores",
                    config=f"dims={'x'.join(map(str, dims))}",
-                   samples_per_s=1e6 * STREAM_SAMPLES / wall)
+                   samples_per_s=1e6 * STREAM_SAMPLES / wall,
+                   host_wall_us=infer_wall)
 
-        chip.infer_stream(x)
-        chip.train_step(x[:1], jnp.tile(tgt, (1, 1)), lr=0.1)
+        stream_wall = common.time_call(
+            lambda: chip.infer_stream(x)[0],
+            iters=3, warmup=1) / STREAM_SAMPLES
+        train_wall = common.time_call(
+            lambda: chip.train_step(x, tgt, lr=0.1),
+            iters=3, warmup=1) / STREAM_SAMPLES
+        walls = {".train": train_wall, ".stream": stream_wall}
         rep = chip.report()
         for r in rep.rows():
+            wall = next((w for suffix, w in walls.items()
+                         if r["name"].endswith(suffix)), infer_wall)
             common.row(r["name"], r["us_per_call"], r["derived"],
                        config=r["config"],
                        samples_per_s=r["samples_per_s"],
-                       joules_per_sample=r["joules_per_sample"])
+                       joules_per_sample=r["joules_per_sample"],
+                       host_wall_us=wall)
 
         xval = rep.compare_hw(hw.network_cost(app, dims))
         worst = max(xval.values())

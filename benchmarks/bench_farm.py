@@ -34,7 +34,9 @@ def main() -> None:
     for chips in CHIP_COUNTS:
         farm = build_farm(APP, chips, seed=0)
         wall = common.time_call(lambda: farm.serve(x)[0], iters=3, warmup=1)
-        farm.train_step(x, tgt, lr=0.1)
+        train_wall = common.time_call(
+            lambda: farm.train_step(x, tgt, lr=0.1), iters=3,
+            warmup=1) / REQUESTS
         rep = farm.report()
         xval = {**rep.compare_chip_sum(), **rep.compare_hw()}
         worst = max(xval.values())
@@ -43,12 +45,16 @@ def main() -> None:
         cfg = f"chips={chips},dims={'x'.join(map(str, dims))}"
         common.row(f"farm.{APP}.c{chips}.wall", wall / REQUESTS,
                    "host us/request (simulator wall clock)", config=cfg,
-                   samples_per_s=1e6 * REQUESTS / wall)
+                   samples_per_s=1e6 * REQUESTS / wall,
+                   host_wall_us=wall / REQUESTS)
         for r in rep.rows():
             common.row(r["name"], r["us_per_call"], r["derived"],
                        config=r["config"],
                        samples_per_s=r["samples_per_s"],
-                       joules_per_sample=r["joules_per_sample"])
+                       joules_per_sample=r["joules_per_sample"],
+                       host_wall_us=(train_wall
+                                     if r["name"].endswith(".train")
+                                     else wall / REQUESTS))
         common.row(f"farm.{APP}.c{chips}.vs_k20",
                    g_infer.time_us,
                    f"serve_speedup={g_infer.time_us * rep.serve_samples_per_s / 1e6:.1f}x "

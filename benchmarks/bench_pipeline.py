@@ -44,7 +44,9 @@ def main() -> None:
     for k in SPLITS:
         pipe = build_pipeline(APP, n_chips=k, seed=0)
         wall = common.time_call(lambda: pipe.serve(x)[0], iters=3, warmup=1)
-        pipe.train_step(tx, tgt, lr=0.1)
+        train_wall = common.time_call(
+            lambda: pipe.train_step(tx, tgt, lr=0.1), iters=3,
+            warmup=1) / BATCH
         rep = pipe.report()
         xval = rep.compare_hw()
         worst = max(xval.values())
@@ -54,12 +56,16 @@ def main() -> None:
                f"cores={'+'.join(map(str, rep.cores_per_chip))}")
         common.row(f"pipeline.{APP}.k{k}.wall", wall / REQUESTS,
                    "host us/request (simulator wall clock)", config=cfg,
-                   samples_per_s=1e6 * REQUESTS / wall)
+                   samples_per_s=1e6 * REQUESTS / wall,
+                   host_wall_us=wall / REQUESTS)
         for r in rep.rows():
             common.row(r["name"], r["us_per_call"], r["derived"],
                        config=r["config"],
                        samples_per_s=r["samples_per_s"],
-                       joules_per_sample=r["joules_per_sample"])
+                       joules_per_sample=r["joules_per_sample"],
+                       host_wall_us=(train_wall
+                                     if r["name"].endswith(".train")
+                                     else wall / REQUESTS))
         serve_sps.append(rep.serve_samples_per_s)
 
         # 1F1B schedule sweep (analytic, from the validated model): span

@@ -23,26 +23,33 @@ ROWS: list[dict] = []
 
 # Every BENCH_*.json row carries these keys so the perf trajectory stays
 # machine-readable across suites (validated by tests/test_bench_schema.py
-# and the CI schema step).
-REQUIRED_ROW_KEYS = ("name", "config", "samples_per_s", "joules_per_sample")
+# and the CI schema step).  ``host_wall_us`` is the measured host
+# wall-clock per sample of the operation behind the row (0.0 when the row
+# has no host-side measurement) — the compiled-step speedup (ISSUE 5) is
+# claimed on this column and regression-gated by tools/compare_bench.py.
+REQUIRED_ROW_KEYS = ("name", "config", "samples_per_s", "joules_per_sample",
+                     "host_wall_us")
 
 
 def row(name: str, us_per_call: float, derived: str = "", *,
         config: str = "", samples_per_s: float = 0.0,
-        joules_per_sample: float = 0.0) -> str:
+        joules_per_sample: float = 0.0, host_wall_us: float = 0.0) -> str:
     """Record one benchmark row.
 
     ``samples_per_s`` must be passed explicitly when the row has a real
     per-SAMPLE rate — a call may cover a whole batch, so deriving it from
     ``us_per_call`` would mislabel calls/s as samples/s.  It stays 0.0
     (meaning "not a throughput row") otherwise; ``joules_per_sample``
-    likewise stays 0.0 for host-side timings with no simulated energy."""
+    likewise stays 0.0 for host-side timings with no simulated energy.
+    ``host_wall_us`` carries the measured host wall-clock per sample for
+    rows whose simulated quantity has a matching host-side run."""
     line = f"{name},{us_per_call:.2f},{derived}"
     print(line)
     ROWS.append({"name": name, "config": config,
                  "us_per_call": round(us_per_call, 2),
                  "samples_per_s": round(samples_per_s, 2),
                  "joules_per_sample": joules_per_sample,
+                 "host_wall_us": round(host_wall_us, 2),
                  "derived": derived})
     return line
 

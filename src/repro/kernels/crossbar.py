@@ -240,6 +240,137 @@ def crossbar_dw_kernel(x: jax.Array, dy: jax.Array, *,
 
 
 # ---------------------------------------------------------------------------
+# Fused per-stage training megakernel: fwd + bwd-error + dw + pulse update
+# ---------------------------------------------------------------------------
+
+def _train_kernel(*refs, n_i: int, lr: float,
+                  max_dw: float, levels: int, w_max: float,
+                  compute_y: bool, dequant: bool):
+    if dequant:
+        gp_ref, gm_ref, x_ref, d_ref, scale_ref, \
+            y_ref, dx_ref, gpo_ref, gmo_ref = refs
+    else:
+        gp_ref, gm_ref, x_ref, d_ref, y_ref, dx_ref, gpo_ref, gmo_ref = refs
+    i, j, l = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+
+    # the conductance pair is read from VMEM ONCE per grid cell and feeds
+    # all three contractions below — the four-call path reads it once per
+    # kernel (fwd, bwd, update), three HBM round-trips for the same tile.
+    w = gp_ref[...].astype(jnp.float32) - gm_ref[...].astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)
+    d = d_ref[...].astype(jnp.float32)
+    if dequant:
+        # paper III.F step 1: the error arrives as sign-magnitude codes
+        # with a shared full-scale, dequantized in-VMEM exactly as in the
+        # bwd/dw kernels.
+        d = d * scale_ref[0, 0]
+
+    # forward partial y(i, l) accumulated over the fan-in grid axis j —
+    # identical accumulation order to crossbar_fwd_kernel's k axis.
+    @pl.when(j == 0)
+    def _init_y():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    if compute_y:
+        y_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    # backward error dx(i, j) accumulated over the neuron grid axis l —
+    # identical order to crossbar_bwd_kernel's n axis.
+    @pl.when(l == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    dx_ref[...] += jax.lax.dot_general(
+        d, w, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # weight update: gpo doubles as the fp32 dw accumulator over the batch
+    # grid axis i (identical order to pulse_update_kernel's m axis), with
+    # the pulse discretization + clipping applied on the last batch tile.
+    @pl.when(i == 0)
+    def _init_dw():
+        gpo_ref[...] = jnp.zeros_like(gpo_ref)
+
+    gpo_ref[...] += 2.0 * lr * jax.lax.dot_general(
+        x, d, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_i - 1)
+    def _apply():
+        unit = max_dw / levels
+        dw = jnp.clip(jnp.round(gpo_ref[...] / unit), -levels, levels) * unit
+        gpo_ref[...] = jnp.clip(gp_ref[...].astype(jnp.float32) + 0.5 * dw,
+                                0.0, w_max)
+        gmo_ref[...] = jnp.clip(gm_ref[...].astype(jnp.float32) - 0.5 * dw,
+                                0.0, w_max)
+
+
+def crossbar_train_kernel(g_plus: jax.Array, g_minus: jax.Array,
+                          x: jax.Array, delta: jax.Array, *, lr: float,
+                          dy_scale: jax.Array | None = None,
+                          max_dw: float = 0.05, levels: int = 128,
+                          w_max: float = 1.0, compute_y: bool = False,
+                          bm: int = TILE_M, bk: int = TILE_ROWS,
+                          bn: int = TILE_COLS, interpret: bool = True
+                          ) -> tuple[jax.Array, jax.Array, jax.Array,
+                                     jax.Array]:
+    """One crossbar's whole training step in ONE kernel (DESIGN.md §8).
+
+    x: (M, K); delta: (M, N); g±: (K, N) ->
+        (y (M, N), dx (M, K), g+', g-').
+
+    Fuses what the four-call path (fwd, bwd, dw, pulse) dispatches
+    separately: each grid cell loads one conductance tile and drives the
+    forward partial (``compute_y``), the transposed error contraction, and
+    the batch-summed outer product + pulse update from that single read.
+    Per-output accumulation orders match the standalone kernels exactly, so
+    at equal block sizes the results are bitwise identical to the four-call
+    sequence (pinned by ``tests/test_compiled_step.py``).  ``dy_scale``
+    selects the 8-bit sign-magnitude error path (codes in ``delta``,
+    dequantized in-kernel).  All three reduction axes are ``arbitrary`` on
+    TPU — every output window is revisited along its own grid axis.
+    """
+    M, K = x.shape
+    _, N = delta.shape
+    bm, bk, bn = min(bm, M), min(bk, K), min(bn, N)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (M // bm, K // bk, N // bn)
+    dequant = dy_scale is not None
+    in_specs = [
+        pl.BlockSpec((bk, bn), lambda i, j, l: (j, l)),
+        pl.BlockSpec((bk, bn), lambda i, j, l: (j, l)),
+        pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
+        pl.BlockSpec((bm, bn), lambda i, j, l: (i, l)),
+    ]
+    args = [g_plus, g_minus, x, delta]
+    if dequant:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, l: (0, 0)))
+        args.append(jnp.asarray(dy_scale, jnp.float32).reshape(1, 1))
+    out = pl.pallas_call(
+        functools.partial(_train_kernel, n_i=grid[0], lr=lr,
+                          max_dw=max_dw, levels=levels,
+                          w_max=w_max, compute_y=compute_y, dequant=dequant),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (j, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (j, l)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+            jax.ShapeDtypeStruct((M, K), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+            jax.ShapeDtypeStruct((K, N), jnp.float32),
+        ],
+        compiler_params=None if interpret else _dimension_semantics(0, 3),
+        interpret=interpret,
+    )(*args)
+    return out[0], out[1], out[2], out[3]
+
+
+# ---------------------------------------------------------------------------
 # Update: G± <- clip(G± ± pulse(lr * x^T delta)/2)
 # ---------------------------------------------------------------------------
 

@@ -58,12 +58,101 @@ def _pad_to(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Block-size autotuner (memoized per shape) + conductance pad cache
+# Block-size autotuner (memoized per shape, persisted) + conductance pad LRU
 # ---------------------------------------------------------------------------
+# Both hot-path memos are bounded LRUs: long farm sweeps walk through many
+# (farm size x shape) keys, and an unbounded dict would grow for the life of
+# the process (ISSUE 5 satellite).  The autotune table additionally persists
+# to ``.cache/autotune-<backend>.json`` (one file per jax backend — interpret
+# -mode CPU timings must not pose as TPU tunings) so tuned block sizes
+# survive across runs.
 
-_BLOCK_CACHE: dict[tuple, tuple[int, int, int]] = {}
+_BLOCK_CACHE: OrderedDict = OrderedDict()
+_BLOCK_CACHE_MAX = 512
+_TUNED_KEYS: set = set()      # keys whose entry came from a real timing
+                              # pass (only these persist — a cached MXU
+                              # default must not suppress later tuning)
 _PAD_CACHE: OrderedDict = OrderedDict()
 _PAD_CACHE_MAX = 32
+
+_AUTOTUNE_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
+
+
+def _autotune_table_path() -> str | None:
+    """The persisted block-table path: ``REPRO_AUTOTUNE_TABLE`` (empty
+    string disables persistence), else ``.cache/autotune-<backend>.json``
+    anchored at the repo root when running from a source checkout (CWD
+    otherwise).  The backend is part of the FILE name — block sizes timed
+    under CPU interpret mode must never masquerade as tuned entries for a
+    real TPU lowering, and vice versa."""
+    if _AUTOTUNE_TABLE_ENV in os.environ:
+        return os.environ[_AUTOTUNE_TABLE_ENV] or None
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    base = root if os.path.exists(os.path.join(root, "pyproject.toml")) \
+        else "."
+    return os.path.join(base, ".cache",
+                        f"autotune-{jax.default_backend()}.json")
+
+
+def _block_cache_put(key: tuple, blocks: tuple[int, int, int],
+                     tuned: bool = False) -> None:
+    _BLOCK_CACHE[key] = blocks
+    _BLOCK_CACHE.move_to_end(key)
+    if tuned:
+        _TUNED_KEYS.add(key)
+    while len(_BLOCK_CACHE) > _BLOCK_CACHE_MAX:
+        evicted, _ = _BLOCK_CACHE.popitem(last=False)
+        _TUNED_KEYS.discard(evicted)
+
+
+def save_autotune_table(path: str | None = None) -> str | None:
+    """Persist the TUNED block entries as JSON (one ``op|dims`` key per
+    entry).  Called automatically after every successful timing pass.
+    Untuned defaults cached for dispatch are deliberately excluded — a
+    persisted default would read as "already tuned" on reload and
+    suppress the timing pass forever."""
+    import json
+    path = path or _autotune_table_path()
+    if path is None:
+        return None
+    try:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        table = {"|".join(map(str, k)): list(v)
+                 for k, v in _BLOCK_CACHE.items() if k in _TUNED_KEYS}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(table, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+        return path
+    except OSError:
+        return None
+
+
+def load_autotune_table(path: str | None = None) -> int:
+    """Load a persisted block table into the in-process cache (entries
+    count toward the LRU cap and are marked as tuned).  Runs once at
+    import; safe to re-run."""
+    import json
+    path = path or _autotune_table_path()
+    if path is None or not os.path.exists(path):
+        return 0
+    try:
+        with open(path) as f:
+            table = json.load(f)
+    except (OSError, ValueError):
+        return 0
+    n = 0
+    for key, blocks in table.items():
+        parts = key.split("|")
+        try:
+            tup = (parts[0],) + tuple(int(p) for p in parts[1:])
+            _block_cache_put(tup, tuple(int(b) for b in blocks),
+                             tuned=True)
+            n += 1
+        except ValueError:
+            continue
+    return n
 
 
 def _default_blocks(M: int, K: int, N: int) -> tuple[int, int, int]:
@@ -87,22 +176,34 @@ def _autotune_enabled(flag: bool | None) -> bool:
 
 
 def block_config(op: str, M: int, K: int, N: int, *,
+                 fold: int | None = None,
                  autotune: bool | None = None,
                  time_fn=None) -> tuple[int, int, int]:
     """Memoized (bm, bk, bn) for an op/shape.  With autotuning enabled and a
     ``time_fn(bm, bk, bn) -> None`` runner, candidates are timed once and
-    the winner cached; otherwise the MXU-derived default is cached."""
-    key = (op, M, K, N)
+    the winner cached; otherwise the MXU-derived default is cached.
+
+    ``fold`` is the leading core-stack fold of the stacked entry points
+    (chips x tiles) and is PART of the cache key: a farm of C chips times a
+    (C*T, M, K, N) dispatch once and never re-tunes when the farm size —
+    and with it the vmapped workload — changes (ISSUE 5 satellite).  Tuned
+    entries persist to ``.cache/autotune-<backend>.json``."""
+    key = (op, M, K, N) if fold is None else (op, fold, M, K, N)
+    tune = _autotune_enabled(autotune)
     hit = _BLOCK_CACHE.get(key)
-    if hit is not None:
+    if hit is not None and (key in _TUNED_KEYS or not tune
+                            or time_fn is None):
+        # a cached default is only final when no timing pass is possible;
+        # a tuned entry always wins (untuned hits upgrade below)
+        _BLOCK_CACHE.move_to_end(key)
         return hit
     blocks = _default_blocks(M, K, N)
-    tune = _autotune_enabled(autotune)
     if tune and time_fn is None:
         # tuning requested but impossible here (traced call): return the
         # default WITHOUT caching it, so a later eager call can still tune
         return blocks
-    if tune and time_fn is not None:
+    timed = tune and time_fn is not None
+    if timed:
         best, best_t = blocks, float("inf")
         for cand in _block_candidates(M, K, N):
             try:
@@ -115,7 +216,9 @@ def block_config(op: str, M: int, K: int, N: int, *,
             if dt < best_t:
                 best, best_t = cand, dt
         blocks = best
-    _BLOCK_CACHE[key] = blocks
+    _block_cache_put(key, blocks, tuned=timed)
+    if timed:
+        save_autotune_table()
     return blocks
 
 
@@ -124,18 +227,23 @@ def _cached_pad(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
 
     Keyed by object identity + target shape; the source array is retained
     while cached so its id cannot be recycled.  Updated weights are new
-    arrays -> new ids -> fresh entries (bounded FIFO)."""
+    arrays -> new ids -> fresh entries (bounded LRU: a hit refreshes the
+    entry, sweeps over many distinct operands evict the coldest)."""
     if tuple(x.shape) == tuple(shape):
         return x
     key = (id(x), tuple(shape))
     hit = _PAD_CACHE.get(key)
     if hit is not None and hit[0] is x:
+        _PAD_CACHE.move_to_end(key)
         return hit[1]
     padded = _pad_to(x, shape)
     _PAD_CACHE[key] = (x, padded)
     while len(_PAD_CACHE) > _PAD_CACHE_MAX:
         _PAD_CACHE.popitem(last=False)
     return padded
+
+
+load_autotune_table()
 
 
 def _maybe_cached_pad(x: jax.Array, shape: tuple[int, ...]) -> jax.Array:
@@ -418,7 +526,8 @@ def _fwd_stacked_call(xs, g_plus, g_minus, *, activation, adc_bits,
 
 def crossbar_fwd_stacked(xs, g_plus, g_minus, *, activation: bool = False,
                          adc_bits: int | None = None, adc_range: float = 0.5,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         autotune: bool | None = None):
     """Batched multi-core forward: one call evaluates T crossbars.
 
     xs (T, M, K); g± (T, K, N) -> (T, M, N).  Core t computes
@@ -431,7 +540,16 @@ def crossbar_fwd_stacked(xs, g_plus, g_minus, *, activation: bool = False,
     (xs, g_plus, g_minus), unfold = _fold_chip_axis(xs, g_plus, g_minus)
     T, M, K = xs.shape
     N = g_plus.shape[2]
-    bm, bk, bn = _default_blocks(M, K, N)
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_fwd_stacked_call(
+            xs, g_plus, g_minus, activation=activation, adc_bits=adc_bits,
+            adc_range=adc_range, bm=bm, bk=bk, bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(xs, g_plus, g_minus)
+    bm, bk, bn = block_config("fwd_stacked", M, K, N, fold=T,
+                              autotune=autotune,
+                              time_fn=None if tracing else time_fn)
     return unfold(_fwd_stacked_call(
         xs, g_plus, g_minus, activation=activation, adc_bits=adc_bits,
         adc_range=adc_range, bm=bm, bk=bk, bn=bn, interpret=interpret))
@@ -451,7 +569,8 @@ def _bwd_stacked_call(dys, g_plus, g_minus, *, bm, bk, bn, interpret):
 
 
 def crossbar_bwd_stacked(dys, g_plus, g_minus, *,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         autotune: bool | None = None):
     """Batched multi-core error backprop: dx[t] = dys[t] @ (G+ - G-)[t]^T.
 
     dys (T, M, N); g± (T, K, N) -> (T, M, K).  The virtual chip drives each
@@ -463,7 +582,15 @@ def crossbar_bwd_stacked(dys, g_plus, g_minus, *,
     (dys, g_plus, g_minus), unfold = _fold_chip_axis(dys, g_plus, g_minus)
     T, M, N = dys.shape
     K = g_plus.shape[1]
-    bm, bk, bn = _default_blocks(M, K, N)
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_bwd_stacked_call(
+            dys, g_plus, g_minus, bm=bm, bk=bk, bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(dys, g_plus, g_minus)
+    bm, bk, bn = block_config("bwd_stacked", M, K, N, fold=T,
+                              autotune=autotune,
+                              time_fn=None if tracing else time_fn)
     return unfold(_bwd_stacked_call(dys, g_plus, g_minus, bm=bm, bk=bk,
                                     bn=bn, interpret=interpret))
 
@@ -480,7 +607,8 @@ def _dw_stacked_call(xs, dys, *, bm, bk, bn, interpret):
     return dw[:, :K, :N]
 
 
-def crossbar_dw_stacked(xs, dys, *, interpret: bool | None = None):
+def crossbar_dw_stacked(xs, dys, *, interpret: bool | None = None,
+                        autotune: bool | None = None):
     """Batched multi-core weight gradient: dw[t] = xs[t]^T @ dys[t]
     (batch-summed outer products, the paper's Eq. 6 per core).
 
@@ -493,7 +621,15 @@ def crossbar_dw_stacked(xs, dys, *, interpret: bool | None = None):
     (xs, dys), unfold = _fold_chip_axis(xs, dys)
     T, M, K = xs.shape
     N = dys.shape[2]
-    bm, bk, bn = _default_blocks(M, K, N)
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_dw_stacked_call(xs, dys, bm=bm, bk=bk, bn=bn,
+                                               interpret=interpret))
+
+    tracing = _is_tracer(xs, dys)
+    bm, bk, bn = block_config("dw_stacked", M, K, N, fold=T,
+                              autotune=autotune,
+                              time_fn=None if tracing else time_fn)
     return unfold(_dw_stacked_call(xs, dys, bm=bm, bk=bk, bn=bn,
                                    interpret=interpret))
 
@@ -522,7 +658,8 @@ def _pulse_stacked_call(g_plus, g_minus, xs, ds, *, lr, max_dw, levels,
 def pulse_update_stacked(g_plus, g_minus, xs, deltas, *, lr: float,
                          max_dw: float = 0.05, levels: int = 128,
                          w_max: float = 1.0,
-                         interpret: bool | None = None):
+                         interpret: bool | None = None,
+                         autotune: bool | None = None):
     """Batched multi-core pulse update (paper III.F step 3) on conductance
     stacks: xs (T, M, K); deltas (T, M, N); g± (T, K, N) -> updated stacks.
 
@@ -538,11 +675,101 @@ def pulse_update_stacked(g_plus, g_minus, xs, deltas, *, lr: float,
         g_plus, g_minus, xs, deltas)
     T, M, K = xs.shape
     N = deltas.shape[2]
-    bm, bk, bn = _default_blocks(M, K, N)
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_pulse_stacked_call(
+            g_plus, g_minus, xs, deltas, lr=lr, max_dw=max_dw,
+            levels=levels, w_max=w_max, bm=bm, bk=bk, bn=bn,
+            interpret=interpret))
+
+    tracing = _is_tracer(g_plus, g_minus, xs, deltas)
+    bm, bk, bn = block_config("pulse_stacked", M, K, N, fold=T,
+                              autotune=autotune,
+                              time_fn=None if tracing else time_fn)
     gp2, gm2 = _pulse_stacked_call(g_plus, g_minus, xs, deltas, lr=lr,
                                    max_dw=max_dw, levels=levels, w_max=w_max,
                                    bm=bm, bk=bk, bn=bn, interpret=interpret)
     return unfold(gp2), unfold(gm2)
+
+
+# ---------------------------------------------------------------------------
+# Fused per-stage training megakernel (stacked)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("lr", "max_dw", "levels", "w_max",
+                                   "compute_y", "dequant",
+                                   "bm", "bk", "bn", "interpret"))
+def _train_stacked_call(g_plus, g_minus, xs, ds, dy_scale, *, lr, max_dw,
+                        levels, w_max, compute_y, dequant, bm, bk, bn,
+                        interpret):
+    T, M, K = xs.shape
+    N = ds.shape[2]
+    Mp, Kp, Np = _pad_dim(M, bm), _pad_dim(K, bk), _pad_dim(N, bn)
+
+    def one(gp, gm, x2, d2):
+        return xbk.crossbar_train_kernel(
+            gp, gm, x2, d2, lr=lr,
+            dy_scale=dy_scale if dequant else None,
+            max_dw=max_dw, levels=levels, w_max=w_max, compute_y=compute_y,
+            bm=bm, bk=bk, bn=bn, interpret=interpret)
+
+    y, dx, gp2, gm2 = jax.vmap(one)(_pad_to(g_plus, (T, Kp, Np)),
+                                    _pad_to(g_minus, (T, Kp, Np)),
+                                    _pad_to(xs, (T, Mp, Kp)),
+                                    _pad_to(ds, (T, Mp, Np)))
+    return (y[:, :M, :N], dx[:, :M, :K],
+            gp2[:, :K, :N], gm2[:, :K, :N])
+
+
+def crossbar_train_stacked(g_plus, g_minus, xs, deltas, *, lr: float,
+                           dy_scale=None, max_dw: float = 0.05,
+                           levels: int = 128, w_max: float = 1.0,
+                           compute_y: bool = False,
+                           interpret: bool | None = None,
+                           autotune: bool | None = None):
+    """Fused per-stage training megakernel over a core stack (DESIGN.md §8).
+
+    xs (T, M, K); deltas (T, M, N); g± (T, K, N) ->
+        (ys (T, M, N), dxs (T, M, K), g+', g-').
+
+    One kernel runs what the four-call path (`crossbar_fwd_stacked` +
+    `crossbar_bwd_stacked` + `crossbar_dw_stacked` + the pulse update)
+    dispatches separately: each conductance tile is read from VMEM once and
+    drives the forward partial (``compute_y=True``), the transposed error
+    contraction, and the batch-summed outer product + pulse discretization.
+    Accumulation orders match the standalone kernels, so at the shared
+    default block sizes the outputs are BITWISE equal to the four-call
+    sequence (the differential reference, pinned by
+    ``tests/test_compiled_step.py``).  ``dy_scale`` selects the paper's
+    8-bit sign-magnitude error path (codes in ``deltas``, dequantized
+    in-kernel).  A leading chip axis folds like
+    :func:`crossbar_fwd_stacked`.  This is the compiled training scan's
+    per-stage body (``repro.sim.compiled``).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    (g_plus, g_minus, xs, deltas), unfold = _fold_chip_axis(
+        g_plus, g_minus, xs, deltas)
+    T, M, K = xs.shape
+    N = deltas.shape[2]
+    dequant = dy_scale is not None
+    scale = (jnp.asarray(dy_scale, jnp.float32).reshape(1, 1)
+             if dequant else jnp.zeros((1, 1), jnp.float32))
+
+    def time_fn(bm, bk, bn):
+        jax.block_until_ready(_train_stacked_call(
+            g_plus, g_minus, xs, deltas, scale, lr=lr, max_dw=max_dw,
+            levels=levels, w_max=w_max, compute_y=compute_y,
+            dequant=dequant, bm=bm, bk=bk, bn=bn, interpret=interpret))
+
+    tracing = _is_tracer(g_plus, g_minus, xs, deltas)
+    bm, bk, bn = block_config("train_stacked", M, K, N, fold=T,
+                              autotune=autotune,
+                              time_fn=None if tracing else time_fn)
+    y, dx, gp2, gm2 = _train_stacked_call(
+        g_plus, g_minus, xs, deltas, scale, lr=lr, max_dw=max_dw,
+        levels=levels, w_max=w_max, compute_y=compute_y, dequant=dequant,
+        bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return unfold(y), unfold(dx), unfold(gp2), unfold(gm2)
 
 
 # ---------------------------------------------------------------------------

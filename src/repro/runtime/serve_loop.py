@@ -70,6 +70,13 @@ class RequestQueue:
     def pop(self) -> Request | None:
         return self._pending.popleft() if self._pending else None
 
+    @property
+    def pending(self) -> tuple:
+        """Read-only snapshot of the queued requests (arrival order) —
+        used by the compiled serving loops to decide whether the whole
+        session can run as one jitted beat scan (uniform shapes)."""
+        return tuple(self._pending)
+
     def complete(self, rid: int, result: Any) -> None:
         if rid in self._results:
             raise ValueError(f"request {rid} completed twice")

@@ -12,8 +12,11 @@ numbers (DESIGN.md "Virtual chip").
 
 Modules:
   placer   NetworkMap + layer params -> stacked conductance tiles per stage
+           (+ StageStacks, the padded ragged envelope of the compiled step)
   noc      static routing schedule model, per-link cycle/bit counters
   chip     VirtualChip: infer / pipelined streaming / train_step + counters
+  compiled jitted whole-step programs: every hot loop (wave, train step,
+           farm step, serving beats) as one donated lax.scan (DESIGN.md §8)
   report   SimReport: counters -> time/energy, hw_model cross-validation
   faults   memristor stuck-on/stuck-off masks + per-core variation injection
   cluster  ChipFarm / FarmServer: N-chip data-parallel farm + serving
@@ -27,6 +30,7 @@ from repro.sim.cluster import ChipFarm, FarmServer, build_farm  # noqa: F401
 from repro.sim.fabric import (ChipPipeline, PipelineFarm,  # noqa: F401
                               PipelineServer, build_pipeline)
 from repro.sim.faults import inject_faults  # noqa: F401
-from repro.sim.placer import Placement, place_network  # noqa: F401
+from repro.sim.placer import (Placement, StageStacks,  # noqa: F401
+                              build_stage_stacks, place_network)
 from repro.sim.report import (FarmReport, PipelineReport,  # noqa: F401
                               SimReport)

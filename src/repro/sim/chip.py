@@ -36,8 +36,11 @@ cross-validation contract):
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quantization as q
 from repro.core.crossbar import (CORE_COLS, CORE_ROWS, CrossbarSpec,
@@ -45,10 +48,19 @@ from repro.core.crossbar import (CORE_COLS, CORE_ROWS, CrossbarSpec,
 from repro.core.mapping import map_network
 from repro.core import hw_model as hw
 from repro.kernels import ops as kernel_ops
+from repro.sim import compiled as csim
 from repro.sim.noc import NocTracker
-from repro.sim.placer import (Placement, Stage, place_network,
+from repro.sim.placer import (Placement, Stage, StageStacks,
+                              build_stage_stacks, place_network,
                               stage_dot_products, tile_inputs)
 from repro.sim.report import PhaseCounters, SimReport
+
+
+def compiled_enabled() -> bool:
+    """Whether the compiled whole-step executor is active (DESIGN.md §8).
+    ``REPRO_SIM_COMPILED=0`` falls back to the eager per-stage reference
+    path everywhere (the differential baseline)."""
+    return os.environ.get("REPRO_SIM_COMPILED", "1") != "0"
 
 
 def _tile_cols(v: jax.Array, r: int, c: int, cols: int) -> jax.Array:
@@ -92,10 +104,60 @@ class VirtualChip:
             placement = inject_faults(placement, faults, w_max=spec.w_max)
             self.faults = faults
         self.placement = placement
+        self._stacks: StageStacks | None = None   # compiled-path envelope
         self.infer_counters = PhaseCounters(
             noc=NocTracker(slot_cycles=placement.cols))
         self.train_counters = PhaseCounters(
             noc=NocTracker(slot_cycles=placement.cols))
+
+    # ------------------------------------------------------------------
+    # Compiled whole-step executor (repro.sim.compiled, DESIGN.md §8)
+    # ------------------------------------------------------------------
+
+    def _compiled_active(self) -> bool:
+        """Compiled path applies unless disabled or the chip owns faults
+        (the stuck-mask re-assert mutates stacks mid-step — that path
+        stays on the eager reference)."""
+        return compiled_enabled() and self.faults is None
+
+    def _get_stacks(self) -> StageStacks:
+        """The padded stage stack, rebuilt whenever the placement's
+        conductances were written outside the compiled step (version
+        bump: eager updates, fault injection, farm scatter)."""
+        if (self._stacks is None
+                or self._stacks.built_version != self.placement.version):
+            self._stacks = build_stage_stacks(self.placement)
+        return self._stacks
+
+    @property
+    def _cfg(self) -> "csim.ChipConfig":
+        return csim.chip_config(self._get_stacks(), self.spec)
+
+    def _apply_fwd_counters(self, counters: PhaseCounters | None,
+                            fcnt, M: int) -> None:
+        """Fold the scan's traced fwd accumulators into `PhaseCounters` —
+        ONE device->host transfer — and replay the static per-stage NoC
+        records (the placement's compile-time routing schedule)."""
+        if counters is None:
+            return
+        slots, steps = (int(v) for v in np.asarray(fcnt))
+        counters.slots["fwd"] += slots
+        counters.core_steps["fwd"] += steps
+        st = self._get_stacks()
+        for s in range(st.S):
+            counters.noc.record(self.placement.stages[s].index,
+                                st.routed[s], st.links[s], M)
+
+    @staticmethod
+    def _apply_bwd_counters(counters: PhaseCounters | None, bcnt) -> None:
+        if counters is None:
+            return
+        b_slots, b_steps, u_slots, u_steps = (int(v)
+                                              for v in np.asarray(bcnt))
+        counters.slots["bwd"] += b_slots
+        counters.core_steps["bwd"] += b_steps
+        counters.slots["update"] += u_slots
+        counters.core_steps["update"] += u_steps
 
     # ------------------------------------------------------------------
     # Stage execution (one batched Pallas call per stage)
@@ -159,7 +221,16 @@ class VirtualChip:
         counters = None
         if count:
             counters = self.train_counters if train else self.infer_counters
-        return self._forward(x, counters, quantize_tail=quantize_tail)
+        if not self._compiled_active():
+            return self._forward(x, counters, quantize_tail=quantize_tail)
+        st = self._get_stacks()
+        acts_p, dps_p, h, fcnt = csim.chip_forward(
+            st.g_plus, st.g_minus, x, st.index_pytree(),
+            jnp.asarray(bool(quantize_tail)), self._cfg)
+        self._apply_fwd_counters(counters, fcnt, x.shape[0])
+        acts = [acts_p[s, :, 1:st.fan_in[s] + 1] for s in range(st.S)]
+        dps = [dps_p[s, :, :st.fan_out[s]] for s in range(st.S)]
+        return acts, dps, h[:, :st.out_dim]
 
     # ------------------------------------------------------------------
     # Inference
@@ -169,14 +240,21 @@ class VirtualChip:
         """One recognition wave (serialized-latency semantics)."""
         x = jnp.atleast_2d(x)
         counters = self.infer_counters if count else None
-        _, dps, _ = self._forward(x, counters)
+        if self._compiled_active():
+            st = self._get_stacks()
+            out, fcnt = csim.chip_infer(st.g_plus, st.g_minus, x,
+                                        st.index_pytree(), self._cfg)
+            self._apply_fwd_counters(counters, fcnt, x.shape[0])
+        else:
+            _, dps, _ = self._forward(x, counters)
+            out = hard_sigmoid(dps[-1])
         if count:
             M = x.shape[0]
             self.infer_counters.samples += M
             self.infer_counters.record_io(
                 self.placement.dims[0] * self.input_bits
                 + self.placement.dims[-1] * hw.ADC_BITS_OUT, M)
-        return hard_sigmoid(dps[-1])
+        return out
 
     def infer_stream(self, x: jax.Array) -> tuple[jax.Array, dict]:
         """Pipelined streaming recognition (Fig. 2): sample ``m`` enters
@@ -231,6 +309,23 @@ class VirtualChip:
         B = M if global_batch is None else global_batch
         c = counters if counters is not None else self.train_counters
 
+        if self._compiled_active():
+            st = self._get_stacks()
+            acts_p = jnp.zeros((st.S, M, st.L), jnp.float32)
+            dps_p = jnp.zeros((st.S, M, st.N_pad), jnp.float32)
+            for s in range(st.S):
+                acts_p = acts_p.at[s, :, 1:st.fan_in[s] + 1].set(acts[s])
+                dps_p = dps_p.at[s, :, :st.fan_out[s]].set(dps[s])
+            delta_p = jnp.zeros((M, st.N_pad), jnp.float32)
+            delta_p = delta_p.at[:, :delta.shape[1]].set(delta)
+            gp2, gm2, delta_fin, bcnt = csim.chip_backward(
+                st.g_plus, st.g_minus, acts_p, dps_p, delta_p,
+                st.index_pytree(), self._cfg, lr_eff=float(lr) / B)
+            st.g_plus, st.g_minus = gp2, gm2
+            st.scatter_back(self.placement)
+            self._apply_bwd_counters(c, bcnt)
+            return delta_fin[:, :st.fan_in[0]]
+
         for si in reversed(range(len(self.placement.stages))):
             st = self.placement.stages[si]
             r, ct = st.row_tiles, st.col_tiles
@@ -284,6 +379,23 @@ class VirtualChip:
         target = jnp.atleast_2d(target)
         M = x.shape[0]
         c = self.train_counters
+
+        if self._compiled_active():
+            # the whole step — wave + reversed bwd/update scan — is ONE
+            # donated XLA program; the conductance stacks update in place
+            # and the counters come back in one transfer (DESIGN.md §8).
+            st = self._get_stacks()
+            gp2, gm2, err, fcnt, bcnt = csim.chip_train(
+                st.g_plus, st.g_minus, x, target,
+                st.index_pytree(), self._cfg, lr_eff=float(lr) / M)
+            st.g_plus, st.g_minus = gp2, gm2
+            st.scatter_back(self.placement)
+            self._apply_fwd_counters(c, fcnt, M)
+            self._apply_bwd_counters(c, bcnt)
+            c.samples += M
+            c.record_io(2 * self.placement.dims[0] * self.input_bits
+                        + self.placement.dims[-1] * hw.ADC_BITS_OUT, M)
+            return err
 
         acts, dps, _ = self._forward(x, c)
         out = hard_sigmoid(dps[-1])

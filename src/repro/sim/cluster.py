@@ -48,6 +48,7 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hw_model as hw
 from repro.core import quantization as q
@@ -56,11 +57,13 @@ from repro.core.crossbar import (CORE_COLS, CORE_ROWS, CrossbarSpec,
 from repro.core.mapping import map_network
 from repro.kernels import ops as kernel_ops
 from repro.runtime.serve_loop import RequestQueue
-from repro.sim.chip import VirtualChip, _tile_cols
+from repro.sim import compiled as csim
+from repro.sim.chip import VirtualChip, _tile_cols, compiled_enabled
 from repro.sim.noc import NocTracker
-from repro.sim.placer import (Placement, fold_subneuron_partials,
-                              place_network, stage_dot_products,
-                              stage_dp_from_outputs, tile_inputs)
+from repro.sim.placer import (Placement, StageStacks, build_stage_stacks,
+                              fold_subneuron_partials, place_network,
+                              stage_dot_products, stage_dp_from_outputs,
+                              tile_inputs)
 from repro.sim.report import (FarmReport, HostLinkTracker, PhaseCounters,
                               SimReport)
 
@@ -133,6 +136,71 @@ class ChipFarm:
         self.serve_full_samples = 0
         self.serve_full_requests = 0
         self.train_steps = 0
+        self._stacks: StageStacks | None = None   # compiled-path layout
+        self._fgp = self._fgm = None              # (S, C, T_max, R, cols)
+        self._stacks_version = -1
+
+    # ------------------------------------------------------------------
+    # Compiled whole-step executor (repro.sim.compiled, DESIGN.md §8)
+    # ------------------------------------------------------------------
+
+    def _compiled_active(self) -> bool:
+        """The compiled farm step runs the chip axis as an array axis on
+        one device; the shard_mapped mesh path stays on the eager
+        dispatches (its per-device placement is a different execution
+        contract)."""
+        return compiled_enabled() and self.mesh is None
+
+    def _get_stacks(self):
+        """(layout, gp (S, C, T_max, rows, cols), gm) — padded chip-axis
+        stacks, rebuilt when the conductance version moved outside the
+        compiled step."""
+        if self._stacks is None or self._stacks_version != self.version:
+            st = self._stacks = build_stage_stacks(self.placement)
+            C = self.n_chips
+            gp = jnp.zeros((st.S, C, st.T_max, st.rows, st.cols),
+                           jnp.float32)
+            gm = jnp.zeros_like(gp)
+            for s in range(st.S):
+                T = self._gp[s].shape[1]
+                gp = gp.at[s, :, :T].set(self._gp[s])
+                gm = gm.at[s, :, :T].set(self._gm[s])
+            self._fgp, self._fgm = gp, gm
+            self._stacks_version = self.version
+        return self._stacks, self._fgp, self._fgm
+
+    def _scatter_back(self, gp, gm) -> None:
+        """Write the compiled step's donated stacks back into the
+        per-stage chip-axis lists (device-side slices) and keep stage 0's
+        replica visible to `extract_chip`/`layers` consumers."""
+        self._fgp, self._fgm = gp, gm
+        for s in range(self._stacks.S):
+            T = self._gp[s].shape[1]
+            self._gp[s] = gp[s, :, :T]
+            self._gm[s] = gm[s, :, :T]
+        self.version += 1
+        self._stacks_version = self.version
+
+    def _apply_phase_counters(self, counters: list[PhaseCounters],
+                              fcnt, bcnt, Mc: int) -> None:
+        """One host transfer of the scan's traced accumulators, fanned to
+        every chip's `PhaseCounters` (replicas execute in lockstep, so
+        the per-chip increments are identical), plus the static NoC
+        replay."""
+        st = self._stacks
+        f = [int(v) for v in np.asarray(fcnt)]
+        b = [int(v) for v in np.asarray(bcnt)] if bcnt is not None else None
+        for c in counters:
+            c.slots["fwd"] += f[0]
+            c.core_steps["fwd"] += f[1]
+            for s in range(st.S):
+                c.noc.record(self.placement.stages[s].index,
+                             st.routed[s], st.links[s], Mc)
+            if b is not None:
+                c.slots["bwd"] += b[0]
+                c.core_steps["bwd"] += b[1]
+                c.slots["update"] += b[2]
+                c.core_steps["update"] += b[3]
 
     # ------------------------------------------------------------------
     # Chip-axis stacked dispatch (shard_mapped when a mesh is present)
@@ -217,8 +285,15 @@ class ChipFarm:
         order and equal `VirtualChip.infer` on the unsharded batch."""
         xb = self._split(x, "infer")
         counters = self.chip_infer if count else None
-        _, dps = self._forward(xb, counters)
-        out = hard_sigmoid(dps[-1])
+        if self._compiled_active():
+            st, gp, gm = self._get_stacks()
+            out, fcnt = csim.chip_infer(gp, gm, xb, st.index_pytree(),
+                                        csim.chip_config(st, self.spec))
+            if count:
+                self._apply_phase_counters(counters, fcnt, None, xb.shape[1])
+        else:
+            _, dps = self._forward(xb, counters)
+            out = hard_sigmoid(dps[-1])
         if count:
             Mc = xb.shape[1]
             bits = (self.placement.dims[0] * self.input_bits
@@ -247,6 +322,27 @@ class ChipFarm:
         spec = self.spec
         C, Mc = xb.shape[0], xb.shape[1]
         M = C * Mc
+
+        if self._compiled_active():
+            # the whole farm step — chip-axis wave, reversed bwd scan,
+            # farm_reduce_sum reconciliation INSIDE the trace, pulses
+            # broadcast to every replica — is ONE donated XLA program.
+            st, gp, gm = self._get_stacks()
+            gp2, gm2, err, fcnt, bcnt = csim.chip_train(
+                gp, gm, xb, tb, st.index_pytree(),
+                csim.chip_config(st, self.spec), lr_eff=float(lr) / M,
+                reconcile=reconcile)
+            self._scatter_back(gp2, gm2)
+            self._apply_phase_counters(self.chip_train, fcnt, bcnt, Mc)
+            bits = (2 * self.placement.dims[0] * self.input_bits
+                    + self.placement.dims[-1] * hw.ADC_BITS_OUT)
+            for c in self.chip_train:
+                c.samples += Mc
+                c.record_io(bits, Mc)
+            self.train_link.record_samples(bits, M)
+            self.train_link.record_reconcile(C * self._reconcile_bits())
+            self.train_steps += 1
+            return err.reshape(M, -1)
 
         acts, dps = self._forward(xb, self.chip_train)
         out = hard_sigmoid(dps[-1])
@@ -633,9 +729,74 @@ class FarmServer:
         farm.serve_beats += 1
         return retired
 
+    def _run_compiled(self, queue: RequestQueue) -> dict:
+        """The whole serving session as ONE jitted scan over beats
+        (DESIGN.md §8): the wavefront schedule of `step` is static —
+        request ``r`` enters chip ``r % C`` at beat ``r // C`` — so the
+        beat loop compiles once and the queue is drained in a single
+        device program.  Counters replay the same static schedule
+        host-side (identical totals to the eager loop)."""
+        farm = self.farm
+        if farm.version != self._version:
+            raise RuntimeError(
+                "farm conductances changed since this FarmServer was "
+                "built (a train_step ran); construct a fresh server — "
+                "the serving stacks are a snapshot")
+        farm.serve_sessions += 1
+        C, S = self.C, self.S
+        st, gp, gm = farm._get_stacks()
+        gp_cat = jnp.moveaxis(gp, 0, 1).reshape(C, S * st.T_max, st.rows,
+                                                st.cols)
+        gm_cat = jnp.moveaxis(gm, 0, 1).reshape(C, S * st.T_max, st.rows,
+                                                st.cols)
+        Q, m, q_max, n_beats = csim.run_serve_session(
+            queue, st, gp_cat, gm_cat, farm.spec, C)
+        self._slot_m = m
+
+        # counters: the eager loop's per-beat billing, aggregated over the
+        # static schedule (lane c serves ceil((Q - c) / C) requests)
+        bits = (farm.placement.dims[0] * farm.input_bits
+                + farm.placement.dims[-1] * hw.ADC_BITS_OUT)
+        for c in range(C):
+            n = (Q - c + C - 1) // C * m
+            if not n:
+                continue
+            cc = farm.chip_infer[c]
+            for stg in self.stages:
+                cc.record_phase("fwd", stg.n_cores, n)
+                cc.noc.record(stg.index, stg.lmap.routed_outputs,
+                              stg.g_plus.shape[0], n)
+            cc.samples += n
+            cc.record_io(bits, n)
+        farm.serve_link.record_samples(bits, Q * m)
+        full = Q // C
+        farm.serve_full_beats += full
+        farm.serve_full_samples += full * C * m
+        farm.serve_full_requests += full * C
+        farm.serve_beats += n_beats
+        beat_us = farm.beat_us
+        return {
+            "beats": n_beats,
+            "retired": Q * m,
+            "beat_us": beat_us,
+            "makespan_us": n_beats * beat_us,
+            "samples_per_s": Q * m / (q_max * beat_us) * 1e6,
+            "occupancy": Q * self.S / max(self.S * self.C * n_beats, 1),
+        }
+
     def run(self, queue: RequestQueue, *, max_beats: int | None = None
             ) -> dict:
-        """Drain the queue; returns serving stats."""
+        """Drain the queue; returns serving stats.
+
+        With the compiled executor active, a fresh server draining a
+        uniform-shape queue runs the whole session as one jitted beat
+        scan; step-wise use (partially drained pipes, beat limits, ragged
+        shapes) stays on the eager per-beat path."""
+        if (self.farm._compiled_active() and max_beats is None
+                and csim.serve_session_applicable(
+                    queue, all(s is None for lane in self.pipe
+                               for s in lane), self._slot_m)):
+            return self._run_compiled(queue)
         beats = retired = 0
         limit = max_beats if max_beats is not None else 10_000_000
         self.farm.serve_sessions += 1

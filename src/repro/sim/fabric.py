@@ -58,10 +58,12 @@ from repro.core.crossbar import (CORE_COLS, CORE_ROWS, CrossbarSpec,
 from repro.core.mapping import map_network, split_network
 from repro.kernels import ops as kernel_ops
 from repro.runtime.serve_loop import RequestQueue
-from repro.sim.chip import VirtualChip
-from repro.sim.placer import (Placement, fold_subneuron_partials,
-                              place_network, stage_dp_from_outputs,
-                              sub_placement, tile_inputs)
+from repro.sim import compiled as csim
+from repro.sim.chip import VirtualChip, compiled_enabled
+from repro.sim.placer import (Placement, StageStacks, build_stage_stacks,
+                              fold_subneuron_partials, place_network,
+                              stage_dp_from_outputs, sub_placement,
+                              tile_inputs)
 from repro.sim.report import InterChipLinkTracker, PipelineReport
 
 
@@ -116,6 +118,19 @@ class ChipPipeline:
         self.train_samples = 0
         self.batch_per_step = 1
         self.n_micro = 1
+        self._serve_stacks: StageStacks | None = None
+        self._serve_stacks_version = -1
+
+    def _get_serve_stacks(self) -> StageStacks:
+        """Padded full-placement stacks for the compiled serving scan —
+        rebuilt when the fabric's conductances moved (``self.version``
+        tracks every train step; the chip slices alias the parent's
+        `Stage` objects, so a rebuild always sees their latest writes)."""
+        if (self._serve_stacks is None
+                or self._serve_stacks_version != self.version):
+            self._serve_stacks = build_stage_stacks(self.placement)
+            self._serve_stacks_version = self.version
+        return self._serve_stacks
 
     # ------------------------------------------------------------------
     # Wave execution (numerics identical to the serial chip)
@@ -503,9 +518,74 @@ class PipelineServer:
         pipe.serve_samples += retired
         return retired
 
+    def _run_compiled(self, queue: RequestQueue) -> dict:
+        """The serving session as ONE jitted scan over beats: the fabric
+        is the single-lane (C == 1) case of the farm's beat scan over the
+        FULL placement's stage stacks — per-stage numerics are per-core
+        independent, so one fused dispatch over every stage equals the
+        eager per-chip dispatches bitwise.  The boundary quantize rule is
+        the scan's ordinary inter-stage ADC (traced); boundary link
+        metering replays the static owner map host-side."""
+        pipe = self.pipe
+        if pipe.version != self._version:
+            raise RuntimeError(
+                "pipeline conductances changed since this PipelineServer "
+                "was built (a train_step ran); construct a fresh server — "
+                "the serving stacks are a snapshot")
+        S = self.S
+        st = pipe._get_serve_stacks()
+        gp_cat = st.g_plus.reshape(1, S * st.T_max, st.rows, st.cols)
+        gm_cat = st.g_minus.reshape(1, S * st.T_max, st.rows, st.cols)
+        Q, m, _, n_beats = csim.run_serve_session(
+            queue, st, gp_cat, gm_cat, pipe.spec, 1)
+        self._slot_m = m
+
+        # counters: the eager loop's per-beat billing aggregated over the
+        # static schedule (every request visits every stage once)
+        n = Q * m
+        for s, stg in enumerate(self.stages):
+            cc = pipe.chips[self.owner[s]].infer_counters
+            cc.record_phase("fwd", stg.n_cores, n)
+            cc.noc.record(stg.index, stg.lmap.routed_outputs,
+                          stg.g_plus.shape[0], n)
+        for s in range(S - 1):
+            k = self.owner[s]
+            if self.owner[s + 1] != k:
+                pipe.link.record_fwd(
+                    k, pipe.boundary_dims[k] * hw.ADC_BITS_OUT, n)
+        pipe.chips[0].infer_counters.record_io(
+            pipe.placement.dims[0] * pipe.input_bits, n)
+        pipe.chips[self.owner[S - 1]].infer_counters.record_io(
+            pipe.placement.dims[-1] * hw.ADC_BITS_OUT, n)
+        for c in pipe.chips:
+            c.infer_counters.samples += n
+        pipe.serve_full_beats += Q
+        pipe.serve_beats += n_beats
+        pipe.serve_samples += n
+        pipe.serve_slot_m = m
+        beat_us = pipe.beat_us
+        return {
+            "beats": n_beats,
+            "retired": n,
+            "beat_us": beat_us,
+            "makespan_us": n_beats * beat_us,
+            "latency_us": pipe.serve_latency_us,
+            "samples_per_s": n / (Q * beat_us) * 1e6,
+            "occupancy": Q * self.S / max(self.S * n_beats, 1),
+        }
+
     def run(self, queue: RequestQueue, *, max_beats: int | None = None
             ) -> dict:
-        """Drain the queue; returns serving stats."""
+        """Drain the queue; returns serving stats.
+
+        With the compiled executor active, a fresh server draining a
+        uniform-shape queue runs the whole session as one jitted beat
+        scan; step-wise use stays on the eager per-beat path."""
+        if (compiled_enabled() and max_beats is None
+                and csim.serve_session_applicable(
+                    queue, all(s is None for s in self.slots),
+                    self._slot_m)):
+            return self._run_compiled(queue)
         beats = retired = 0
         limit = max_beats if max_beats is not None else 10_000_000
         done_before = queue.completed

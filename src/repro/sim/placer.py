@@ -83,6 +83,8 @@ class Placement:
     rows: int
     cols: int
     nmap: NetworkMap
+    version: int = 0      # bumped on every conductance write (cache key for
+                          # the compiled executor's padded stage stacks)
 
     @property
     def n_cores(self) -> int:
@@ -97,6 +99,7 @@ class Placement:
         virtual chip's update phase mutates the placement in place)."""
         self.stages[index].g_plus = g_plus
         self.stages[index].g_minus = g_minus
+        self.version += 1
 
     def extract_params(self) -> list[dict[str, jax.Array]]:
         """Stacks -> per-layer {"g_plus", "g_minus"} dicts (inverse of
@@ -243,6 +246,161 @@ def sub_placement(pl: Placement, stage_indices: tuple[int, ...]) -> Placement:
     dims = (lms[0].fan_in,) + tuple(lm.fan_out for lm in lms)
     return Placement(stages=stages, dims=dims, rows=pl.rows, cols=pl.cols,
                      nmap=sub_nmap)
+
+
+# ---------------------------------------------------------------------------
+# StageStacks: the padded ragged stage stack of the compiled executor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StageStacks:
+    """All stages of a placement padded to one (T_max, rows, cols) envelope.
+
+    The compiled whole-step executor (``repro.sim.compiled``, DESIGN.md §8)
+    runs the stage loop as a single ``lax.scan``, which needs every
+    per-stage operand to share one static shape.  This container owns that
+    padding/mask layout:
+
+      * ``g_plus``/``g_minus`` — ``(S, T_max, rows, cols)`` conductance
+        stacks; cores beyond a stage's ``row_tiles*col_tiles`` grid are
+        zero (a zero crossbar emits zeros, which the gathers below never
+        read back into a valid lane);
+      * gather maps (int32, precomputed host-side) that express the
+        per-stage tile/aggregate/fold discipline of `tile_inputs`,
+        `_tile_cols`, `stage_dp_from_outputs` and the backward fan-in fold
+        as shape-uniform indexed reads.  Every index either addresses a
+        valid element or a dedicated always-zero slot, so the SAME traced
+        program executes any stage of the ragged stack;
+      * ``valid_out`` — ``(S, N_pad)`` output-lane validity, re-masked
+        after the transport ADC (quantizing a padded zero lane would emit
+        a nonzero code — the mask keeps padding lanes exactly zero so
+        ragged padding is bitwise-invisible, the §8 invariance the
+        pipeline fabric's bitwise pins rest on).
+
+    Ragged reductions over the padded axes (the fan-in-tile aggregation of
+    Fig. 14 and the backward fan-out fold) are evaluated as SEQUENTIAL
+    left-to-right sums over the static maxima: trailing zero terms are
+    exact no-ops in float addition, so a stage computes bit-identical
+    values no matter how large an envelope it is embedded in — a chip
+    slice's stacks and the full network's stacks agree bitwise.
+    """
+    S: int
+    T_max: int
+    r_max: int
+    c_max: int
+    rows: int
+    cols: int
+    L: int               # padded input-vector length (bias slot 0 + lanes)
+    N_pad: int           # padded output-lane count (max col_tiles*cols)
+    out_dim: int         # fan_out of the last stage
+    fan_in: tuple[int, ...]
+    fan_out: tuple[int, ...]
+    n_cores: tuple[int, ...]       # per-stage billed cores (grid + agg)
+    routed: tuple[int, ...]        # per-stage routed outputs (NoC record)
+    links: tuple[int, ...]         # per-stage emitting links (NoC record)
+    g_plus: jax.Array              # (S, T_max, rows, cols)
+    g_minus: jax.Array
+    in_idx: jax.Array              # (S, T_max, rows)  h_ext -> core lines
+    ds_idx: jax.Array              # (S, T_max, cols)  local_ext -> core cols
+    dp_idx: jax.Array              # (S, r_max, N_pad) ys_flat_ext -> dp lanes
+    fold_idx: jax.Array            # (S, r_max, c_max) dxs_ext core pick
+    prev_idx: jax.Array            # (S, N_pad)        dxg_flat_ext -> delta
+    valid_out: jax.Array           # (S, N_pad) float32 {0, 1}
+    core_counts: jax.Array         # (S,) int32 (traced counter feed)
+    built_version: int = -1
+
+    def index_pytree(self) -> dict[str, jax.Array]:
+        """The traced (non-donated) operands of the compiled programs."""
+        return {"in_idx": self.in_idx, "ds_idx": self.ds_idx,
+                "dp_idx": self.dp_idx, "fold_idx": self.fold_idx,
+                "prev_idx": self.prev_idx, "valid_out": self.valid_out,
+                "core_counts": self.core_counts}
+
+    def scatter_back(self, pl: "Placement") -> None:
+        """Write the padded stacks back into the placement's `Stage`
+        objects (slices, device-side) and mark the placement clean — the
+        aliasing contract of `sub_placement` keeps holding because the
+        Stage objects themselves are updated in place."""
+        for s, st in enumerate(pl.stages):
+            T = st.row_tiles * st.col_tiles
+            st.g_plus = self.g_plus[s, :T]
+            st.g_minus = self.g_minus[s, :T]
+        pl.version += 1
+        self.built_version = pl.version
+
+
+def build_stage_stacks(pl: Placement) -> StageStacks:
+    """Pad a placement's ragged stage list into a `StageStacks` envelope.
+
+    Index-map construction happens in numpy (static, host-side); only the
+    conductance stacks and the final index arrays land on device."""
+    import numpy as np
+
+    stages = pl.stages
+    S = len(stages)
+    rows, cols = pl.rows, pl.cols
+    rs = [st.row_tiles for st in stages]
+    cs = [st.col_tiles for st in stages]
+    Ts = [r * c for r, c in zip(rs, cs)]
+    T_max, r_max, c_max = max(Ts), max(rs), max(cs)
+    fan_in = tuple(st.lmap.fan_in for st in stages)
+    fan_out = tuple(st.lmap.fan_out for st in stages)
+    # output-lane envelope: wide enough for every stage's fan-out tiling
+    # AND every stage's fan-in (the upstream error delta rides the same
+    # lanes on the way back, and stage 0's fan-in can exceed any fan-out)
+    N_pad = max(max(c * cols for c in cs), max(fan_in))
+    L = 1 + N_pad
+
+    gp = jnp.zeros((S, T_max, rows, cols), jnp.float32)
+    gm = jnp.zeros((S, T_max, rows, cols), jnp.float32)
+    for s, st in enumerate(stages):
+        gp = gp.at[s, :Ts[s]].set(st.g_plus.astype(jnp.float32))
+        gm = gm.at[s, :Ts[s]].set(st.g_minus.astype(jnp.float32))
+
+    in_idx = np.zeros((S, T_max, rows), np.int32)       # 0 = bias slot (=0)
+    ds_idx = np.full((S, T_max, cols), N_pad, np.int32)  # N_pad = zero col
+    dp_idx = np.full((S, r_max, N_pad), T_max * cols, np.int32)
+    fold_idx = np.full((S, r_max, c_max), T_max, np.int32)
+    prev_idx = np.full((S, N_pad), r_max * rows, np.int32)
+    valid = np.zeros((S, N_pad), np.float32)
+    for s in range(S):
+        r, c, F, O = rs[s], cs[s], fan_in[s], fan_out[s]
+        t = np.arange(Ts[s])
+        # input tiling (tile_inputs): core i*c+j line l <- global line
+        # i*rows + l of [bias, x, zeros]; lines past the payload stay on
+        # the always-zero bias slot.
+        g = (t[:, None] // c) * rows + np.arange(rows)[None, :]
+        in_idx[s, :Ts[s]] = np.where((g >= 1) & (g <= F), g, 0)
+        # fan-out tiling (_tile_cols): core i*c+j col k <- lane j*cols+k of
+        # the local error (zero beyond fan_out by construction).
+        ds_idx[s, :Ts[s]] = ((t[:, None] % c) * cols
+                             + np.arange(cols)[None, :])
+        # dp assembly: lane n sums partials ys[(i*c + n//cols)*cols
+        # + n%cols] over fan-in tiles i (exact aggregation, Fig. 14).
+        n = np.arange(O)
+        for i in range(r):
+            dp_idx[s, i, :O] = (i * c + n // cols) * cols + n % cols
+        # backward fan-in fold: group i sums dxs over its c fan-out tiles.
+        fold_idx[s, :r, :c] = (np.arange(r)[:, None] * c
+                               + np.arange(c)[None, :])
+        # upstream error: lane n <- global line n+1 of the folded dx
+        # (strip the bias line), zero beyond this stage's fan_in.
+        prev_idx[s, :F] = np.arange(F) + 1
+        valid[s, :O] = 1.0
+
+    return StageStacks(
+        S=S, T_max=T_max, r_max=r_max, c_max=c_max, rows=rows, cols=cols,
+        L=L, N_pad=N_pad, out_dim=fan_out[-1],
+        fan_in=fan_in, fan_out=fan_out,
+        n_cores=tuple(st.n_cores for st in stages),
+        routed=tuple(st.lmap.routed_outputs for st in stages),
+        links=tuple(st.g_plus.shape[0] for st in stages),
+        g_plus=gp, g_minus=gm,
+        in_idx=jnp.asarray(in_idx), ds_idx=jnp.asarray(ds_idx),
+        dp_idx=jnp.asarray(dp_idx), fold_idx=jnp.asarray(fold_idx),
+        prev_idx=jnp.asarray(prev_idx), valid_out=jnp.asarray(valid),
+        core_counts=jnp.asarray([st.n_cores for st in stages], jnp.int32),
+        built_version=pl.version)
 
 
 def place_layer(index: int, params: dict[str, jax.Array], lmap: LayerMap,

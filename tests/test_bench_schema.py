@@ -42,6 +42,23 @@ def test_bench_rows_share_required_keys(suite):
         assert isinstance(row["samples_per_s"], (int, float))
         assert isinstance(row["joules_per_sample"], (int, float))
         assert row["samples_per_s"] >= 0
+        assert isinstance(row["host_wall_us"], (int, float))
+        assert row["host_wall_us"] >= 0
+
+
+@pytest.mark.parametrize("suite,endings", [
+    ("sim", (".wall", ".infer", ".stream", ".train")),
+    ("farm", (".wall", ".serve", ".train")),
+    ("pipeline", (".wall", ".serve", ".train")),
+])
+def test_host_wall_populated_on_measured_rows(suite, endings):
+    """ISSUE 5: every row whose simulated quantity has a matching host-side
+    run carries the measured host wall-clock per sample."""
+    record = _load(suite)
+    rows = [r for r in record["rows"] if r["name"].endswith(endings)]
+    assert rows
+    for r in rows:
+        assert r["host_wall_us"] > 0, (suite, r["name"])
 
 
 def test_farm_bench_scales_monotonically():

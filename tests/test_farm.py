@@ -358,6 +358,13 @@ print("OK")
 
 def test_meshed_farm_matches_single_device(subproc):
     out = subproc("""
+import os
+# pin: shard_map over the chip axis is numerically invisible vs the same
+# eager array-axis execution.  The serial reference must run the same
+# (eager) dispatch path — the compiled executor is a different XLA
+# program whose fusion shifts last-bit rounding; compiled==eager is
+# pinned separately in tests/test_compiled_step.py.
+os.environ["REPRO_SIM_COMPILED"] = "0"
 import jax, jax.numpy as jnp
 from repro.configs.paper_apps import PAPER_SPEC
 from repro.core import crossbar as xb

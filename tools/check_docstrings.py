@@ -24,6 +24,7 @@ DEFAULT_TARGETS = [
     "src/repro/sim/placer.py",
     "src/repro/sim/fabric.py",
     "src/repro/sim/chip.py",
+    "src/repro/sim/compiled.py",
     "src/repro/sim/report.py",
     "src/repro/kernels/ops.py",
     "src/repro/core/hw_model.py",

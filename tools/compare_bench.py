@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Gate host wall-clock regressions against the committed bench artifacts.
+
+Compares a fresh bench run's BENCH_*.json against a baseline copy (a
+directory snapshot, or the committed files via ``git show``) and FAILS when
+a ``sim.*`` row's measured host wall (``host_wall_us``, falling back to
+``us_per_call`` for pre-ISSUE-5 baselines) regressed by more than the
+threshold (default 20%, ISSUE 5 satellite).  Non-sim suites are reported
+but not gated — their wall rows track farm/pipeline scaling, which CI
+hardware jitter shouldn't fail the build on.
+
+  # CI: snapshot the committed artifacts, run the benches, then diff
+  mkdir -p /tmp/bench-baseline && cp BENCH_*.json /tmp/bench-baseline/
+  PYTHONPATH=src python -m benchmarks.run sim farm pipeline
+  python tools/compare_bench.py --baseline-dir /tmp/bench-baseline
+
+  # locally: diff the working tree against the last commit
+  python tools/compare_bench.py --baseline-ref HEAD
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SUITES = ("sim", "farm", "pipeline")
+GATED_PREFIX = "sim."          # rows that fail the build on regression
+
+
+def _wall(row: dict) -> float:
+    """The row's host wall-clock per sample.  For ``.wall`` rows —
+    whose ``us_per_call`` IS the host wall — pre-ISSUE-5 baselines fall
+    back to it; on simulated rows ``us_per_call`` is modeled chip time,
+    so a missing ``host_wall_us`` means "no measurement" (skipped)."""
+    wall = float(row.get("host_wall_us") or 0.0)
+    if not wall and row["name"].endswith(".wall"):
+        wall = float(row.get("us_per_call") or 0.0)
+    return wall
+
+
+def _load_current(suite: str) -> dict | None:
+    path = os.path.join(REPO, f"BENCH_{suite}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def _load_baseline(suite: str, *, ref: str | None,
+                   directory: str | None) -> dict | None:
+    if directory is not None:
+        path = os.path.join(directory, f"BENCH_{suite}.json")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:BENCH_{suite}.json"], cwd=REPO,
+            capture_output=True, text=True, check=True)
+        return json.loads(out.stdout)
+    except (subprocess.CalledProcessError, ValueError, OSError):
+        return None
+
+
+def compare(threshold: float, ref: str | None,
+            directory: str | None) -> int:
+    """Print the per-row wall diff; return the number of gate failures."""
+    failures = 0
+    for suite in SUITES:
+        cur = _load_current(suite)
+        base = _load_baseline(suite, ref=ref, directory=directory)
+        if cur is None or base is None:
+            print(f"# {suite}: missing current or baseline artifact — "
+                  f"skipped")
+            continue
+        base_rows = {r["name"]: r for r in base["rows"]}
+        for row in cur["rows"]:
+            name = row["name"]
+            if not name.endswith(".wall") and not _wall(row):
+                continue
+            old = base_rows.get(name)
+            if old is None or not _wall(old) or not _wall(row):
+                continue
+            ratio = _wall(row) / _wall(old)
+            gated = name.startswith(GATED_PREFIX)
+            status = "ok"
+            if ratio > 1.0 + threshold:
+                status = "REGRESSED" if gated else "regressed (ungated)"
+                failures += int(gated)
+            print(f"{name},{_wall(old):.2f},{_wall(row):.2f},"
+                  f"{ratio:.2f}x,{status}")
+    return failures
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    default_threshold = float(os.environ.get(
+        "REPRO_BENCH_WALL_TOLERANCE", "0.20"))
+    ap.add_argument("--threshold", type=float, default=default_threshold,
+                    help="allowed host-wall growth fraction (default 0.20;"
+                         " env REPRO_BENCH_WALL_TOLERANCE overrides — size"
+                         " it up when the baseline artifacts were measured"
+                         " on faster hardware than the runner)")
+    group = ap.add_mutually_exclusive_group()
+    group.add_argument("--baseline-ref", default=None,
+                       help="git ref holding the baseline BENCH_*.json")
+    group.add_argument("--baseline-dir", default=None,
+                       help="directory holding baseline BENCH_*.json")
+    args = ap.parse_args(argv)
+    ref = args.baseline_ref
+    if ref is None and args.baseline_dir is None:
+        ref = "HEAD"
+    failures = compare(args.threshold, ref, args.baseline_dir)
+    if failures:
+        print(f"# FAILED: {failures} sim.* host-wall row(s) regressed "
+              f"> {args.threshold:.0%}")
+        return 1
+    print("# host-wall check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

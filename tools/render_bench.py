@@ -42,21 +42,25 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--suites", nargs="*", default=list(SUITES))
     args = ap.parse_args(argv)
 
-    print("| benchmark row | config | samples/s | energy/sample | notes |")
-    print("|---|---|---|---|---|")
+    print("| benchmark row | config | samples/s | energy/sample "
+          "| host wall | notes |")
+    print("|---|---|---|---|---|---|")
     for suite in args.suites:
         path = os.path.join(REPO, f"BENCH_{suite}.json")
         if not os.path.exists(path):
-            print(f"| *{suite}: BENCH_{suite}.json not generated* | | | | |")
+            print(f"| *{suite}: BENCH_{suite}.json not generated* "
+                  f"| | | | | |")
             continue
         with open(path) as f:
             record = json.load(f)
         for row in record["rows"]:
             if not row["name"].endswith(KEEP):
                 continue
+            wall = row.get("host_wall_us", 0.0)
             print(f"| `{row['name']}` | `{row['config']}` "
                   f"| {fmt_sps(row['samples_per_s'])} "
                   f"| {fmt_j(row['joules_per_sample'])} "
+                  f"| {f'{wall:,.0f} µs' if wall else '—'} "
                   f"| {row.get('derived', '')} |")
     return 0
 
